@@ -1,0 +1,87 @@
+"""Kernel-path microbenchmarks.
+
+Measures the host (numpy) decode — the production CPU path — against the
+zlib stand-in (the LZMA-vs-LZ4 axis), plus throughput of the vectorized
+predicate+compact pipeline.  Pallas kernels run in interpret mode here
+(CPU container); their TPU performance is a dry-run/roofline question,
+not a wall-clock one.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.data.codecs import decode_basket, encode_basket
+
+
+def _time(fn, reps=3):
+    fn()  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    n = 1 << 20  # 1M values / basket batch
+    arrs = {
+        "int_deltas": np.cumsum(rng.integers(0, 16, n)).astype(np.int32),
+        "float_pt": (rng.exponential(25, n) + 3).astype(np.float32),
+        "bool_trig": rng.random(n) < 0.1,
+    }
+    for name, arr in arrs.items():
+        for codec in ("bitpack", "zlib"):
+            blob = encode_basket(arr, codec)
+            t = _time(lambda b=blob, c=codec, d=arr.dtype: decode_basket(b, c, d))
+            mbps = arr.nbytes / t / 1e6
+            out[f"{name}/{codec}"] = mbps
+            csv_row(
+                f"kernel/decode/{name}/{codec}",
+                t * 1e6,
+                f"{mbps:.0f} MB/s ratio={arr.nbytes/len(blob):.2f}",
+            )
+
+    # predicate + compact (vectorized jnp path used by near-data filtering)
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.predicate_eval import Group, Program
+    from repro.kernels.ref import GROUP_COUNT, OP_IDS
+
+    E, K = 1 << 17, 8
+    prog = Program(
+        groups=(Group(GROUP_COUNT, (0, 1), (OP_IDS[">"], OP_IDS["abs<"]), (20.0, 2.4)),),
+        term_branches=("pt", "eta"),
+        group_collections=("X",),
+        group_weights=(None,),
+    )
+    terms = jnp.asarray(rng.normal(20, 15, (2, E, K)), jnp.float32)
+    valid = jnp.asarray((rng.random((1, E, K)) < 0.4), jnp.float32)
+    weights = jnp.zeros((1, E, K), jnp.float32)
+
+    def pred():
+        ref.predicate_eval_ref(terms, valid, weights, prog).block_until_ready()
+
+    t = _time(pred)
+    out["predicate"] = E / t / 1e6
+    csv_row("kernel/predicate_eval", t * 1e6, f"{E/t/1e6:.1f} Mevents/s")
+
+    payload = jnp.asarray(rng.normal(size=(E, 16)), jnp.float32)
+    mask = jnp.asarray(rng.random(E) < 0.05)
+
+    def compact():
+        ref.stream_compact_ref(payload, mask)[0].block_until_ready()
+
+    t = _time(compact)
+    out["compact"] = E / t / 1e6
+    csv_row("kernel/stream_compact", t * 1e6, f"{E/t/1e6:.1f} Mevents/s")
+    return out
+
+
+if __name__ == "__main__":
+    run()

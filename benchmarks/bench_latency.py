@@ -1,0 +1,42 @@
+"""Paper Fig. 4a: end-to-end filtering latency across 1/10/100 Gb/s tiers.
+
+Systems: client-side zlib (LZMA stand-in), client-side bitpack (LZ4
+stand-in), two-phase client ("Client Opt"), and near-data (SkimROOT).
+Compute stages are measured on this host; link stages use the byte-exact
+analytic model (DESIGN.md §2c).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import QUERY, csv_row, get_store
+from repro.core.engine import NetworkModel, SkimEngine
+
+TIERS = {"1g": 1.0, "10g": 10.0, "100g": 100.0}
+
+
+def run() -> dict:
+    out = {}
+    for tier, gbps in TIERS.items():
+        link = NetworkModel(gbps, rtt_s=0.010 if gbps == 1.0 else 0.001)
+        rows = {}
+        for label, codec, mode in [
+            ("client_zlib", "zlib", "client_plain"),
+            ("client_bitpack", "bitpack", "client_plain"),
+            ("client_opt_bitpack", "bitpack", "client_opt"),
+            ("neardata_bitpack", "bitpack", "near_data"),
+        ]:
+            res = SkimEngine(get_store(codec), input_link=link).run(QUERY, mode)
+            rows[label] = res.breakdown.total()
+            csv_row(
+                f"latency/{tier}/{label}",
+                rows[label] * 1e6,
+                f"passed={res.n_passed}",
+            )
+        out[tier] = rows
+        speedup = rows["client_bitpack"] / rows["neardata_bitpack"]
+        csv_row(f"latency/{tier}/speedup_vs_client", speedup, "x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

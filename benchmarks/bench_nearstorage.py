@@ -1,0 +1,32 @@
+"""Paper Fig. 5a: server-side filtering vs near-data (SkimROOT).
+
+Server-side reads locally but per-basket (no TTreeCache); near-data keeps
+coalesced prefetching over the PCIe-class link and the vectorized decode.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import QUERY, csv_row, get_store
+from repro.core.engine import SkimEngine, WAN_1G
+
+
+def run() -> dict:
+    out = {}
+    for mode in ("server_side", "near_data"):
+        res = SkimEngine(get_store("bitpack"), input_link=WAN_1G).run(QUERY, mode)
+        out[mode] = res.breakdown.as_dict()
+        out[mode]["requests"] = res.stats.requests
+        for op, secs in res.breakdown.as_dict().items():
+            if op != "total":
+                csv_row(f"nearstorage/{mode}/{op}", secs * 1e6, "")
+        csv_row(f"nearstorage/{mode}/requests", res.stats.requests, "basket reads")
+    csv_row(
+        "nearstorage/speedup",
+        out["server_side"]["total"] / max(out["near_data"]["total"], 1e-9),
+        "x (3.18x in paper)",
+    )
+    return out
+
+
+if __name__ == "__main__":
+    run()

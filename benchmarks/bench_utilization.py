@@ -1,0 +1,24 @@
+"""Paper Fig. 5b: compute-busy fraction per placement (CPU-utilization proxy).
+
+busy_fraction = measured compute time / end-to-end latency: ~99% for the
+deserialize-bound legacy client, low for the fetch-bound optimized client,
+high again for the DPU-placed filter (87% in the paper).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import QUERY, csv_row, get_store
+from repro.core.engine import SkimEngine, WAN_1G
+
+
+def run() -> dict:
+    out = {}
+    for mode in ("client_plain", "client_opt", "server_side", "near_data"):
+        res = SkimEngine(get_store("bitpack"), input_link=WAN_1G).run(QUERY, mode)
+        out[mode] = res.busy_fraction
+        csv_row(f"utilization/{mode}", res.busy_fraction * 100, "% busy")
+    return out
+
+
+if __name__ == "__main__":
+    run()

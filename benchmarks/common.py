@@ -1,0 +1,85 @@
+"""Shared benchmark fixtures: a NanoAOD-scale store + the Higgs-style query.
+
+The evaluation store mirrors the paper's file *structurally*: jagged
+physics collections, a trigger-bit block, and a long tail of output-only
+branches; 27-ish filter branches and ~90 output branches.  Absolute sizes
+are scaled to this container (REPRO_BENCH_EVENTS overrides).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.data.store import EventStore
+from repro.data.synth import make_nanoaod_like
+
+N_EVENTS = int(os.environ.get("REPRO_BENCH_EVENTS", "100000"))
+N_HLT = 64
+N_FILLER = 120
+
+QUERY = {
+    "input": "bench.skim",
+    "output": "bench_out.skim",
+    "branches": [
+        "Electron_*", "Muon_*", "Jet_*", "MET_*", "HLT_*",
+        "PV_npvs", "run", "event", "luminosityBlock",
+    ] + [f"Filler_{i:03d}" for i in range(60)],
+    "selection": {
+        "preselection": [{"branch": "nElectron", "op": ">=", "value": 1}],
+        "object": [
+            {
+                "collection": "Electron",
+                "cuts": [
+                    {"var": "pt", "op": ">", "value": 20.0},
+                    {"var": "eta", "op": "abs<", "value": 2.4},
+                    {"var": "mvaId", "op": ">=", "value": 0.5},
+                ],
+                "min_count": 1,
+            },
+            {
+                "collection": "Jet",
+                "cuts": [
+                    {"var": "pt", "op": ">", "value": 25.0},
+                    {"var": "eta", "op": "abs<", "value": 4.7},
+                ],
+                "min_count": 2,
+            },
+        ],
+        "event": [
+            {
+                "type": "ht", "collection": "Jet", "var": "pt",
+                "object_cuts": [{"var": "pt", "op": ">", "value": 30.0}],
+                "op": ">", "value": 80.0,
+            },
+            {"type": "any", "branches": [
+                "HLT_IsoMu24", "HLT_Ele32_WPTight_Gsf",
+            ]},
+            {"type": "cut", "branch": "MET_pt", "op": ">", "value": 10.0},
+        ],
+    },
+}
+
+_CACHE: dict[str, EventStore] = {}
+
+
+def get_store(codec: str = "bitpack") -> EventStore:
+    """Build (or load from a disk cache) the benchmark store."""
+    if codec in _CACHE:
+        return _CACHE[codec]
+    path = os.path.join(
+        tempfile.gettempdir(), f"repro_bench_{codec}_{N_EVENTS}.skim"
+    )
+    if os.path.exists(path):
+        st = EventStore.load(path)
+    else:
+        st = make_nanoaod_like(
+            N_EVENTS, n_hlt=N_HLT, n_filler=N_FILLER, codec=codec, seed=12
+        )
+        st.save(path)
+    _CACHE[codec] = st
+    return st
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,111 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+
+    compute    = FLOPs_per_device / 197 TFLOP/s (bf16)
+    memory     = bytes_per_device / 819 GB/s  (HBM)
+    collective = collective_bytes_per_device / 50 GB/s (ICI per link)
+
+FLOPs/bytes come from the trip-count-corrected probe totals (the raw
+``cost_analysis`` of a scanned program counts loop bodies once — see
+launch/dryrun.py).  MODEL_FLOPS uses 6*N*D (train), 2*N*D (prefill),
+2*N*B (decode) with N = active params for MoE.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+
+def model_flops(arch: str, shape_name: str, n_devices: int) -> float:
+    """Useful-work FLOPs per device."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    # embeddings do ~2 matmul-equivalents; 6ND already folds this in roughly
+    if spec.kind == "train":
+        total = 6.0 * n_active * spec.global_batch * spec.seq_len
+    elif spec.kind == "prefill":
+        total = 2.0 * n_active * spec.global_batch * spec.seq_len
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * spec.global_batch
+    return total / n_devices
+
+
+def analyze_record(rec: dict) -> dict:
+    corr = rec.get("corrected")
+    prod = rec["production"]
+    if corr:
+        flops = corr["flops"]
+        byts = corr["bytes"]
+        coll = corr["collective_bytes"]
+    else:
+        flops = prod["cost"].get("flops", 0.0)
+        byts = prod["cost"].get("bytes", 0.0)
+        coll = prod["collectives"]["total_bytes"]
+
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    dominant = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_x)
+    mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "kind": rec["kind"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dominant,
+        "roofline_fraction": (t_c / bound) if bound else 0.0,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "step_time_lower_bound_s": bound,
+    }
+
+
+def load_all(dryrun_dir: str = "experiments/dryrun", mesh: str = "single"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def run(dryrun_dir: str = "experiments/dryrun") -> list:
+    rows = load_all(dryrun_dir)
+    if not rows:
+        print("roofline: no dry-run artifacts found (run repro.launch.dryrun)")
+        return []
+    hdr = (
+        f"{'arch':<18} {'shape':<12} {'compute':>10} {'memory':>10} "
+        f"{'collect':>10} {'dominant':>10} {'roof%':>6} {'useful%':>8}"
+    )
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['arch']:<18} {r['shape']:<12} {r['compute_s']:>10.4f} "
+            f"{r['memory_s']:>10.4f} {r['collective_s']:>10.4f} "
+            f"{r['dominant']:>10} {100*r['roofline_fraction']:>5.1f} "
+            f"{100*min(r['useful_ratio'],9.99):>7.1f}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
+
+  Fig 4a -> bench_latency      Fig 4b -> bench_breakdown
+  Fig 5a -> bench_nearstorage  Fig 5b -> bench_utilization
+  (ours)  -> bench_kernels, roofline (from dry-run artifacts)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_breakdown,
+        bench_kernels,
+        bench_latency,
+        bench_nearstorage,
+        bench_scaling,
+        bench_utilization,
+        roofline,
+    )
+
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for mod, label in [
+        (bench_latency, "Fig4a latency"),
+        (bench_breakdown, "Fig4b breakdown"),
+        (bench_nearstorage, "Fig5a near-storage"),
+        (bench_utilization, "Fig5b utilization"),
+        (bench_kernels, "kernel micro"),
+        (bench_scaling, "beyond-paper scaling/overlap"),
+    ]:
+        print(f"# --- {label} ---", file=sys.stderr)
+        mod.run()
+    print("# --- roofline (from dry-run artifacts) ---", file=sys.stderr)
+    roofline.run()
+    print(f"# total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

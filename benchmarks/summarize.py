@@ -1,0 +1,113 @@
+"""Emit EXPERIMENTS.md-ready markdown from the dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.summarize [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze_record
+
+GB = 1e9
+
+
+def _load(d):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append((os.path.basename(p), json.load(f)))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | strat | compile s | args GB/dev | temp GB/dev | AG | AR | RS | A2A | CP |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name, rec in recs:
+        mesh = "x".join(str(v) for v in rec["mesh"].values())
+        strat = rec.get("strategy", "tp")
+        prod = rec["production"]
+        mem = prod["memory"]
+        c = prod["collectives"]["counts"]
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {mesh} | {strat} "
+            f"| {prod['compile_s']:.1f} "
+            f"| {mem.get('argument_size_in_bytes', 0)/GB:.2f} "
+            f"| {mem.get('temp_size_in_bytes', 0)/GB:.2f} "
+            f"| {c['all-gather']} | {c['all-reduce']} | {c['reduce-scatter']} "
+            f"| {c['all-to-all']} | {c['collective-permute']} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | roofline % | useful % | step bound s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name, rec in recs:
+        if rec.get("strategy", "tp") != "tp" or "corrected" not in rec:
+            continue
+        if not name.endswith("__single.json"):
+            continue
+        r = analyze_record(rec)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} "
+            f"| {100*r['roofline_fraction']:.1f} | {100*min(r['useful_ratio'], 9.99):.1f} "
+            f"| {r['step_time_lower_bound_s']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def strategy_table(recs) -> str:
+    by_key = {}
+    for name, rec in recs:
+        if "corrected" not in rec:
+            continue
+        key = (rec["arch"], rec["shape"])
+        by_key.setdefault(key, {})[rec.get("strategy", "tp")] = rec
+    lines = [
+        "| arch | shape | strategy | compute s | memory s | collective s | roofline % |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), strats in sorted(by_key.items()):
+        if len(strats) < 2:
+            continue
+        for strat, rec in sorted(strats.items()):
+            r = analyze_record(rec)
+            lines.append(
+                f"| {arch} | {shape} | {strat} | {r['compute_s']:.4f} "
+                f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                f"| {100*r['roofline_fraction']:.1f} |"
+            )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline", "strategy"])
+    args = ap.parse_args()
+    recs = _load(args.dir)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run cells\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod baseline)\n")
+        print(roofline_table(recs))
+        print()
+    if args.section in ("all", "strategy"):
+        print("### Strategy comparison (hillclimbed pairs)\n")
+        print(strategy_table(recs))
+
+
+if __name__ == "__main__":
+    main()

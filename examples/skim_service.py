@@ -1,0 +1,63 @@
+"""Skim service comparison — the paper's evaluation (Figs. 4a/4b/5a/5b)
+as a runnable scenario: four placements x three network tiers.
+
+Run: PYTHONPATH=src python examples/skim_service.py [--events 50000]
+"""
+
+import argparse
+
+from repro.core.engine import NetworkModel, SkimEngine
+from repro.data.synth import make_nanoaod_like
+
+QUERY = {
+    "branches": ["Electron_*", "Muon_*", "Jet_*", "MET_*", "HLT_*"]
+    + [f"Filler_{i:03d}" for i in range(40)],
+    "selection": {
+        "preselection": [{"branch": "nElectron", "op": ">=", "value": 1}],
+        "object": [
+            {
+                "collection": "Electron",
+                "cuts": [
+                    {"var": "pt", "op": ">", "value": 20.0},
+                    {"var": "eta", "op": "abs<", "value": 2.4},
+                ],
+            }
+        ],
+        "event": [{"type": "cut", "branch": "MET_pt", "op": ">", "value": 25.0}],
+    },
+}
+
+MODES = ["client_plain", "client_opt", "server_side", "near_data"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--events", type=int, default=50_000)
+    args = ap.parse_args()
+
+    store = make_nanoaod_like(args.events, n_hlt=32, n_filler=60)
+    print(f"store: {args.events} events, {len(store.branch_names())} branches, "
+          f"{store.compressed_bytes()/1e6:.1f} MB\n")
+
+    print(f"{'mode':<14}", end="")
+    for gbps in (1, 10, 100):
+        print(f"{str(gbps)+' Gb/s':>12}", end="")
+    print(f"{'busy%':>8}")
+
+    for mode in MODES:
+        print(f"{mode:<14}", end="")
+        busy = 0.0
+        for gbps in (1, 10, 100):
+            link = NetworkModel(gbps, rtt_s=0.010 if gbps == 1 else 0.001)
+            res = SkimEngine(store, input_link=link).run(QUERY, mode)
+            print(f"{res.breakdown.total():>11.2f}s", end="")
+            busy = res.busy_fraction
+        print(f"{100*busy:>7.0f}%")
+
+    res = SkimEngine(store).run(QUERY, "near_data")
+    print(f"\nnear-data breakdown: "
+          + ", ".join(f"{k}={v:.3f}s" for k, v in res.breakdown.as_dict().items()))
+
+
+if __name__ == "__main__":
+    main()

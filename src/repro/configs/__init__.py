@@ -1,0 +1,86 @@
+"""Architecture registry: one module per assigned architecture.
+
+Each module exports ``CONFIG`` (the exact published configuration) and
+``SMOKE`` (a reduced same-family config for CPU smoke tests).  Shapes are
+the assignment's four input-shape cells; applicability skips follow
+DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+ARCHS = [
+    "xlstm_1p3b",
+    "chameleon_34b",
+    "jamba_1p5_large",
+    "hubert_xlarge",
+    "deepseek_v2_236b",
+    "qwen2_moe_a2p7b",
+    "deepseek_67b",
+    "starcoder2_7b",
+    "granite_20b",
+    "gemma3_1b",
+]
+
+# public ids from the assignment -> module names
+ALIASES = {
+    "xlstm-1.3b": "xlstm_1p3b",
+    "chameleon-34b": "chameleon_34b",
+    "jamba-1.5-large-398b": "jamba_1p5_large",
+    "hubert-xlarge": "hubert_xlarge",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2p7b",
+    "deepseek-67b": "deepseek_67b",
+    "starcoder2-7b": "starcoder2_7b",
+    "granite-20b": "granite_20b",
+    "gemma3-1b": "gemma3_1b",
+}
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# archs with a sub-quadratic (SSM/hybrid/local-attention) path run long_500k
+SUBQUADRATIC = {"xlstm_1p3b", "jamba_1p5_large", "gemma3_1b"}
+ENCODER_ONLY = {"hubert_xlarge"}
+
+
+def canonical(arch: str) -> str:
+    arch = arch.replace("-", "_").replace(".", "p")
+    return ALIASES.get(arch, arch)
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def cells(arch: str) -> list[str]:
+    """Applicable shape cells for an arch (skips per DESIGN.md §4)."""
+    a = canonical(arch)
+    out = []
+    for name, spec in SHAPES.items():
+        if spec.kind == "decode" and a in ENCODER_ONLY:
+            continue  # encoder-only: no decode step
+        if name == "long_500k" and a not in SUBQUADRATIC:
+            continue  # pure full-attention archs skip 500k decode
+        out.append(name)
+    return out
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in cells(a)]

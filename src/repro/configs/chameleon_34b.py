@@ -1,0 +1,38 @@
+"""Chameleon-34B [vlm] — early-fusion, VQ image tokens in one vocabulary
+[arXiv:2405.09818; unverified].
+
+48L, d_model 8192, 64H (GQA kv=8), d_ff 22016, vocab 65536 (text + image
+codes).  Early fusion means the "frontend" is just the shared token
+embedding — image tokens arrive as ordinary vocab ids (stub per the
+assignment).  Chameleon uses qk-norm for stability.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=65536,
+    qk_norm=True,
+    attn_chunk=2048,
+    extra=(("microbatches", 8),),
+)
+
+SMOKE = CONFIG.with_(
+    name="chameleon-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=512,
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

@@ -1,0 +1,33 @@
+"""DeepSeek-67B [dense] — llama architecture [arXiv:2401.02954; hf].
+
+95L, d_model 8192, 64H (GQA kv=8), d_ff 22016, vocab 102400.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=102400,
+    attn_chunk=2048,
+    extra=(("microbatches", 16),),
+)
+
+SMOKE = CONFIG.with_(
+    name="deepseek-67b-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=512,
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

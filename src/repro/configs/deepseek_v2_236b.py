@@ -1,0 +1,57 @@
+"""DeepSeek-V2 (236B) [moe] — MLA with kv_lora_rank 512, 2 shared + 160
+routed experts top-6 [arXiv:2405.04434; hf].
+
+60L, d_model 5120, 128 q-heads, per-expert d_ff 1536, vocab 102400.
+First layer dense (d_ff 12288); MLA caches only the 512-dim compressed KV
+plus a 64-dim shared rope key.
+"""
+
+from repro.models.config import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,  # dense-FFN size for the first_k_dense layer
+    vocab=102400,
+    head_dim=128,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    rope_head_dim=64,
+    moe=MoESpec(
+        n_experts=160,
+        top_k=6,
+        d_expert=1536,
+        n_shared=2,
+        shared_d_ff=3072,
+        every=1,
+        first_k_dense=1,
+    ),
+    attn_chunk=2048,
+    extra=(("microbatches", 16),),
+)
+
+SMOKE = CONFIG.with_(
+    name="deepseek-v2-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=512,
+    kv_lora_rank=32,
+    q_lora_rank=48,
+    rope_head_dim=16,
+    moe=MoESpec(
+        n_experts=8, top_k=2, d_expert=64, n_shared=1, shared_d_ff=64,
+        every=1, first_k_dense=1, capacity_factor=8.0,
+    ),
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

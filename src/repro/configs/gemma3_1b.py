@@ -1,0 +1,45 @@
+"""Gemma3-1B [dense] — 5:1 local:global attention, 128k-class context
+[hf:google/gemma-3-1b-pt; unverified].
+
+26L, d_model 1152, 4H (MQA kv=1, head_dim 256), d_ff 6912, vocab 262144,
+tied embeddings.  Pattern: 5 sliding-window (512) layers then 1 global.
+``long_500k`` decode runs: local layers keep a 512-slot ring KV; only the
+1-in-6 global layers hold full-length KV.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab=262144,
+    tie_embeddings=True,
+    window=512,
+    mixer_pattern=("attn_local",) * 5 + ("attn",),
+    rope_theta=1_000_000.0,
+    attn_chunk=2048,
+    loss_chunk=256,  # 262k vocab: keep live logits small
+)
+
+SMOKE = CONFIG.with_(
+    name="gemma3-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=128,
+    vocab=512,
+    window=16,
+    mixer_pattern=("attn_local", "attn_local", "attn"),
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

@@ -1,0 +1,35 @@
+"""Granite-20B [dense] — llama-arch code model with MQA
+[arXiv:2405.04324; hf].
+
+52L, d_model 6144, 48H (MQA kv=1), d_ff 24576, vocab 49152.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    mlp_gated=False,
+    attn_chunk=2048,
+    extra=(("microbatches", 8),),
+)
+
+SMOKE = CONFIG.with_(
+    name="granite-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab=512,
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

@@ -1,0 +1,39 @@
+"""HuBERT-XLarge [audio] — encoder-only, wav2vec2 architecture
+[arXiv:2106.07447; unverified].
+
+48L, d_model 1280, 16H MHA (kv=16), d_ff 5120, vocab 504 (masked-unit
+targets).  The CNN waveform frontend is a STUB per the assignment:
+``input_specs()`` supplies precomputed (B, S, 512) frame embeddings.
+Bidirectional (non-causal); no decode step.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    frontend_dim=512,
+    attn_chunk=2048,
+)
+
+SMOKE = CONFIG.with_(
+    name="hubert-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=64,
+    frontend_dim=32,
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

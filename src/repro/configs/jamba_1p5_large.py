@@ -1,0 +1,45 @@
+"""Jamba-1.5-Large (398B) [hybrid] — Mamba+attention 1:7 interleave, MoE
+[arXiv:2403.19887; hf].
+
+72L, d_model 8192, 64H (GQA kv=8), d_ff 24576, vocab 65536; MoE 16 experts
+top-2 on every other layer.  Super-block of 8: attention at position 4
+(1 attn : 7 mamba), matching Jamba's published interleave.
+"""
+
+from repro.models.config import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab=65536,
+    mixer_pattern=(
+        "mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba",
+    ),
+    moe=MoESpec(n_experts=16, top_k=2, d_expert=24576, every=2),
+    d_inner_factor=2,
+    d_state=16,
+    conv_kernel=4,
+    attn_chunk=2048,
+    extra=(("microbatches", 16),),
+)
+
+SMOKE = CONFIG.with_(
+    name="jamba-smoke",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=512,
+    mixer_pattern=("mamba", "attn"),
+    moe=MoESpec(n_experts=4, top_k=2, d_expert=128, every=2, capacity_factor=8.0),
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

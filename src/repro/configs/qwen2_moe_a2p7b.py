@@ -1,0 +1,40 @@
+"""Qwen1.5/2-MoE-A2.7B [moe] — 4 shared + 60 routed experts top-4
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf].
+
+24L, d_model 2048, 16H MHA (kv=16), per-expert d_ff 1408, vocab 151936,
+shared-expert hidden 5632 (= 4 x 1408).  Every layer MoE.
+"""
+
+from repro.models.config import ModelConfig, MoESpec
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,
+    vocab=151936,
+    moe=MoESpec(
+        n_experts=60, top_k=4, d_expert=1408, n_shared=4, shared_d_ff=5632,
+        every=1,
+    ),
+    attn_chunk=2048,
+    extra=(("microbatches", 2),),
+)
+
+SMOKE = CONFIG.with_(
+    name="qwen2-moe-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    vocab=512,
+    moe=MoESpec(n_experts=8, top_k=2, d_expert=64, n_shared=2, shared_d_ff=128,
+                capacity_factor=8.0),
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

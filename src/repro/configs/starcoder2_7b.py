@@ -1,0 +1,34 @@
+"""StarCoder2-7B [dense] — GQA + RoPE code model [arXiv:2402.19173; hf].
+
+32L, d_model 4608, 36H (GQA kv=4), d_ff 18432, vocab 49152.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    d_ff=18432,
+    vocab=49152,
+    mlp_gated=False,
+    attn_chunk=2048,
+    extra=(("microbatches", 4),),
+)
+
+SMOKE = CONFIG.with_(
+    name="starcoder2-smoke",
+    n_layers=2,
+    d_model=72,
+    n_heads=6,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=512,
+    dtype="float32",
+    remat="none",
+    attn_chunk=0,
+    loss_chunk=64,
+)

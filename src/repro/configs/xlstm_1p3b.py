@@ -1,0 +1,34 @@
+"""xLSTM-1.3B [ssm] — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified].
+
+48L, d_model 2048, 4 heads, d_ff=0 (mixers carry their own up-projection),
+vocab 50304.  Pattern: 7 mLSTM : 1 sLSTM per super-block (xLSTM[7:1]).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    mixer_pattern=("mlstm",) * 7 + ("slstm",),
+    d_inner_factor=2,
+    conv_kernel=4,
+    extra=(("microbatches", 4),),
+)
+
+SMOKE = CONFIG.with_(
+    name="xlstm-smoke",
+    n_layers=4,
+    d_model=64,
+    n_heads=2,
+    vocab=256,
+    mixer_pattern=("mlstm", "slstm"),
+    dtype="float32",
+    remat="none",
+    loss_chunk=64,
+)

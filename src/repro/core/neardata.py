@@ -1,0 +1,188 @@
+"""Near-data skimming on the accelerator mesh (DESIGN.md §2, §5).
+
+The paper's placement insight — filter where the bytes live, ship only
+survivors — mapped to a JAX mesh: events are sharded over the ``data``
+(and ``pod``) axes; each shard evaluates the compiled predicate and
+compacts its survivors locally inside ``shard_map``; only compacted
+survivor payloads ever cross the interconnect.
+
+Device data layout: jagged collections are padded to a static ``K``
+objects/event with a validity mask (built once at ingest by
+:func:`build_padded_inputs`), so the device path is dense tiles — exactly
+what the Pallas kernels want.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels import ref as kref
+from repro.kernels.predicate_eval import Program, compile_query
+
+
+@dataclass
+class PaddedBatch:
+    """Dense device-side event batch for predicate evaluation."""
+
+    terms: jnp.ndarray  # (T, E, K) float32
+    valid: jnp.ndarray  # (G, E, K) float32
+    weights: jnp.ndarray  # (G, E, K) float32
+    payload: jnp.ndarray  # (E, D) float32 — output columns to compact
+    n_events: int
+
+
+def _padded_collection(values: np.ndarray, counts: np.ndarray, K: int):
+    """Jagged -> (E, K) dense + validity."""
+    E = len(counts)
+    out = np.zeros((E, K), dtype=np.float32)
+    validity = np.zeros((E, K), dtype=np.float32)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    cols = np.arange(K)
+    take = np.minimum(counts[:, None], K)
+    validity[cols[None, :] < take] = 1.0
+    # scatter values row-wise
+    idx_event = np.repeat(np.arange(E), np.minimum(counts, K))
+    idx_slot = np.concatenate([np.arange(min(c, K)) for c in counts]) if E else np.empty(0, int)
+    src = np.concatenate(
+        [values[offsets[i] : offsets[i] + min(counts[i], K)] for i in range(E)]
+    ) if E else np.empty(0, values.dtype)
+    out[idx_event, idx_slot] = src.astype(np.float32)
+    return out, validity
+
+
+def build_padded_inputs(
+    data: dict[str, np.ndarray],
+    program: Program,
+    store,
+    K: int = 8,
+    payload_branches: list[str] | None = None,
+) -> PaddedBatch:
+    """Build dense kernel inputs from columnar (host) data.
+
+    ``data`` is the decoded columnar dict (flat arrays; jagged values with
+    their ``n<Coll>`` counts).  ``K`` caps objects/event (overflow objects
+    are dropped from *filtering only* — counts-based cuts use true counts
+    via validity, see below).
+    """
+    flat_names = [n for n in data if not (store.branches.get(n) and store.branches[n].jagged)]
+    n_events = len(data[flat_names[0]])
+
+    dense_cache: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+
+    def dense(branch: str) -> tuple[np.ndarray, np.ndarray]:
+        if branch in dense_cache:
+            return dense_cache[branch]
+        br = store.branches.get(branch)
+        if br is not None and br.jagged:
+            counts = data[br.counts_branch].astype(np.int64)
+            out = _padded_collection(np.asarray(data[branch]), counts, K)
+        else:
+            col = np.asarray(data[branch], dtype=np.float32).reshape(-1, 1)
+            v = np.zeros((n_events, K), np.float32)
+            v[:, 0] = 1.0
+            x = np.zeros((n_events, K), np.float32)
+            x[:, 0] = col[:, 0]
+            out = (x, v)
+        dense_cache[branch] = out
+        return out
+
+    T = program.n_terms
+    G = program.n_groups
+    terms = np.zeros((T, n_events, K), np.float32)
+    valid = np.zeros((G, n_events, K), np.float32)
+    weights = np.zeros((G, n_events, K), np.float32)
+
+    for t, branch in enumerate(program.term_branches):
+        terms[t] = dense(branch)[0]
+    for g, (coll, wbranch) in enumerate(
+        zip(program.group_collections, program.group_weights)
+    ):
+        if coll is not None:
+            ref_branch = next(
+                program.term_branches[t] for t in program.groups[g].term_ids
+            )
+            valid[g] = dense(ref_branch)[1]
+        else:
+            anchor = program.term_branches[program.groups[g].term_ids[0]]
+            valid[g] = dense(anchor)[1]
+        if wbranch is not None:
+            weights[g] = dense(wbranch)[0]
+
+    payload_branches = payload_branches or []
+    if payload_branches:
+        payload = np.stack(
+            [np.asarray(data[b], dtype=np.float32) for b in payload_branches], axis=1
+        )
+    else:
+        payload = np.zeros((n_events, 1), np.float32)
+
+    return PaddedBatch(
+        terms=jnp.asarray(terms),
+        valid=jnp.asarray(valid),
+        weights=jnp.asarray(weights),
+        payload=jnp.asarray(payload),
+        n_events=n_events,
+    )
+
+
+# ---------------------------------------------------------------------------
+# device-side evaluation
+# ---------------------------------------------------------------------------
+
+
+def skim_mask(batch_terms, batch_valid, batch_weights, program: Program):
+    """jnp predicate path (works on any backend; Pallas path in kernels.ops)."""
+    return kref.predicate_eval_ref(batch_terms, batch_valid, batch_weights, program)
+
+
+def compact_jnp(payload: jnp.ndarray, mask: jnp.ndarray):
+    return kref.stream_compact_ref(payload, mask)
+
+
+def sharded_skim(mesh, program: Program, data_axes=("pod", "data")):
+    """Build the sharded near-data skim step.
+
+    Returns a jitted fn: (terms, valid, weights, payload) sharded over the
+    event axis -> (packed survivors per shard, global survivor count).
+    The compaction happens *inside* the shard — only packed survivors and a
+    scalar count are exposed to cross-shard collectives, which is the
+    paper's "return only the filtered data" on the mesh.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(a for a in data_axes if a in mesh.axis_names)
+
+    def _local(terms, valid, weights, payload):
+        mask = kref.predicate_eval_ref(terms, valid, weights, program)
+        packed, count = kref.stream_compact_ref(payload, mask)
+        total = jax.lax.psum(count, axes)
+        return packed, mask.astype(jnp.int32), total
+
+    spec_e1 = P(None, axes, None)  # (T/G, E, K)
+    spec_pay = P(axes, None)  # (E, D)
+
+    return jax.jit(
+        shard_map(
+            _local,
+            mesh=mesh,
+            in_specs=(spec_e1, spec_e1, spec_e1, spec_pay),
+            out_specs=(spec_pay, P(axes), P()),
+            check_rep=False,
+        )
+    )
+
+
+__all__ = [
+    "PaddedBatch",
+    "Program",
+    "compile_query",
+    "build_padded_inputs",
+    "skim_mask",
+    "compact_jnp",
+    "sharded_skim",
+]

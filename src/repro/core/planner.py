@@ -1,0 +1,61 @@
+"""Two-phase execution planning (paper §3.1–3.2).
+
+Splits the branch universe into:
+
+  * **filter-criteria branches** — read in phase 1 for every event
+    (the paper's 27-of-1749 set), staged presel -> object -> event, and
+  * **output-only branches** — read in phase 2 only for baskets that
+    contain at least one passing event (the paper's 89-branch output set).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.branchmap import expand_branches, with_counts_branches
+from repro.core.query import Query
+
+
+@dataclass
+class SkimPlan:
+    query: Query
+    filter_branches: list[str]
+    output_branches: list[str]  # full output set (includes filter branches kept)
+    output_only_branches: list[str]  # phase-2 fetch set
+    stage_order: list[str] = field(
+        default_factory=lambda: ["preselection", "object", "event"]
+    )
+    excluded_by_optimization: list[str] = field(default_factory=list)
+
+    def describe(self) -> str:
+        return (
+            f"SkimPlan(filter={len(self.filter_branches)} branches, "
+            f"output={len(self.output_branches)}, "
+            f"phase2={len(self.output_only_branches)}, "
+            f"excluded={len(self.excluded_by_optimization)})"
+        )
+
+
+def plan_skim(query: Query, store) -> SkimPlan:
+    available = store.branch_names()
+
+    filter_set = {b for b in query.filter_branches() if b in available}
+    missing = query.filter_branches() - filter_set
+    if missing:
+        raise KeyError(f"selection references unknown branches: {sorted(missing)}")
+    filter_branches = with_counts_branches(sorted(filter_set), store)
+
+    selected, excluded = expand_branches(
+        query.branches, available, force_all=query.force_all,
+        extra_required=set(filter_branches),
+    )
+    output_branches = with_counts_branches(selected, store)
+    output_only = [b for b in output_branches if b not in set(filter_branches)]
+
+    return SkimPlan(
+        query=query,
+        filter_branches=filter_branches,
+        output_branches=output_branches,
+        output_only_branches=output_only,
+        excluded_by_optimization=excluded,
+    )

@@ -1,0 +1,270 @@
+"""JSON query format -> predicate AST (paper §3.1, Fig. 2c).
+
+A query replaces the hand-written C++/Python filtering script with a
+declarative JSON document::
+
+    {
+      "input":  "events.skim",
+      "output": "skimmed.skim",
+      "branches": ["Electron_*", "Jet_pt", "HLT_*", "MET_*"],
+      "force_all": false,
+      "selection": {
+        "preselection": [
+          {"branch": "nElectron", "op": ">=", "value": 1}
+        ],
+        "object": [
+          {"collection": "Electron",
+           "cuts": [{"var": "pt",  "op": ">",    "value": 20.0},
+                    {"var": "eta", "op": "abs<", "value": 2.4}],
+           "min_count": 1}
+        ],
+        "event": [
+          {"type": "ht", "collection": "Jet", "var": "pt",
+           "object_cuts": [{"var": "pt", "op": ">", "value": 30.0}],
+           "op": ">", "value": 200.0},
+          {"type": "any", "branches": ["HLT_IsoMu24"]},
+          {"type": "cut", "branch": "MET_pt", "op": ">", "value": 40.0}
+        ]
+      }
+    }
+
+The three selection tiers map to the paper's hierarchical model:
+*preselection* (cheap single-branch cuts), *object-level* (per-particle
+kinematic cuts over jagged collections), *event-level* (composite derived
+variables such as HT, trigger ORs).  Stages run in order and events are
+discarded as early as possible (basket-granular short-circuiting in the
+engine).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+OPS = {
+    ">": lambda x, v: x > v,
+    ">=": lambda x, v: x >= v,
+    "<": lambda x, v: x < v,
+    "<=": lambda x, v: x <= v,
+    "==": lambda x, v: x == v,
+    "!=": lambda x, v: x != v,
+    "abs<": lambda x, v: abs(x) < v,
+    "abs>": lambda x, v: abs(x) > v,
+}
+
+
+@dataclass(frozen=True)
+class Cut:
+    """Flat-branch comparison (preselection / event tier)."""
+
+    branch: str
+    op: str
+    value: float
+
+    def branches(self) -> set[str]:
+        return {self.branch}
+
+
+@dataclass(frozen=True)
+class VarCut:
+    """Comparison on one variable of a collection member."""
+
+    var: str
+    op: str
+    value: float
+
+
+@dataclass(frozen=True)
+class ObjectSelection:
+    """Object tier: count collection members passing all cuts >= min_count."""
+
+    collection: str
+    cuts: tuple[VarCut, ...]
+    min_count: int = 1
+
+    def branches(self) -> set[str]:
+        out = {f"n{self.collection}"}
+        for c in self.cuts:
+            out.add(f"{self.collection}_{c.var}")
+        return out
+
+
+@dataclass(frozen=True)
+class HTCut:
+    """Event tier: scalar sum of ``var`` over passing objects, compared."""
+
+    collection: str
+    var: str
+    object_cuts: tuple[VarCut, ...]
+    op: str
+    value: float
+
+    def branches(self) -> set[str]:
+        out = {f"n{self.collection}", f"{self.collection}_{self.var}"}
+        for c in self.object_cuts:
+            out.add(f"{self.collection}_{c.var}")
+        return out
+
+
+@dataclass(frozen=True)
+class AnyOf:
+    """Event tier: OR of boolean branches (trigger conditions)."""
+
+    names: tuple[str, ...]
+
+    def branches(self) -> set[str]:
+        return set(self.names)
+
+
+Stage = tuple  # tuple of AST nodes evaluated with logical AND
+
+
+@dataclass
+class Query:
+    input: str
+    output: str
+    branches: tuple[str, ...]  # output branch patterns (wildcards allowed)
+    force_all: bool
+    preselection: tuple = ()
+    object_stage: tuple = ()
+    event_stage: tuple = ()
+    meta: dict = field(default_factory=dict)
+
+    def stages(self) -> list[tuple[str, tuple]]:
+        return [
+            ("preselection", self.preselection),
+            ("object", self.object_stage),
+            ("event", self.event_stage),
+        ]
+
+    def filter_branches(self) -> set[str]:
+        """Branches the selection criteria read (the paper's O(10) set)."""
+        out: set[str] = set()
+        for _, stage in self.stages():
+            for node in stage:
+                out |= node.branches()
+        return out
+
+    def stage_branches(self, stage_name: str) -> set[str]:
+        for name, stage in self.stages():
+            if name == stage_name:
+                out: set[str] = set()
+                for node in stage:
+                    out |= node.branches()
+                return out
+        raise KeyError(stage_name)
+
+
+def _parse_varcuts(items) -> tuple[VarCut, ...]:
+    return tuple(VarCut(c["var"], c["op"], c["value"]) for c in items)
+
+
+def parse_query(doc: dict | str) -> Query:
+    """Parse a JSON query document (dict or JSON string) into a :class:`Query`."""
+    if isinstance(doc, str):
+        doc = json.loads(doc)
+    sel = doc.get("selection", {})
+
+    presel = tuple(
+        Cut(c["branch"], c["op"], c["value"]) for c in sel.get("preselection", [])
+    )
+    objs = tuple(
+        ObjectSelection(
+            o["collection"], _parse_varcuts(o.get("cuts", [])), o.get("min_count", 1)
+        )
+        for o in sel.get("object", [])
+    )
+    events: list = []
+    for e in sel.get("event", []):
+        kind = e.get("type", "cut")
+        if kind == "cut":
+            events.append(Cut(e["branch"], e["op"], e["value"]))
+        elif kind == "any":
+            events.append(AnyOf(tuple(e["branches"])))
+        elif kind == "ht":
+            events.append(
+                HTCut(
+                    e["collection"],
+                    e.get("var", "pt"),
+                    _parse_varcuts(e.get("object_cuts", [])),
+                    e["op"],
+                    e["value"],
+                )
+            )
+        else:
+            raise ValueError(f"unknown event-cut type: {kind}")
+
+    for op_node in presel + tuple(events):
+        if isinstance(op_node, Cut) and op_node.op not in OPS:
+            raise ValueError(f"unknown op {op_node.op}")
+
+    return Query(
+        input=doc.get("input", ""),
+        output=doc.get("output", ""),
+        branches=tuple(doc.get("branches", [])),
+        force_all=bool(doc.get("force_all", False)),
+        preselection=presel,
+        object_stage=objs,
+        event_stage=tuple(events),
+        meta={k: v for k, v in doc.items() if k not in
+              ("input", "output", "branches", "force_all", "selection")},
+    )
+
+
+# ---------------------------------------------------------------------------
+# numpy evaluator (host path; the jnp/Pallas path lives in repro.kernels)
+# ---------------------------------------------------------------------------
+
+
+def _event_ids(counts: np.ndarray) -> np.ndarray:
+    return np.repeat(np.arange(len(counts)), counts)
+
+
+def eval_node(node, data: dict) -> np.ndarray:
+    """Evaluate one AST node -> boolean mask over events.
+
+    ``data`` maps flat branch name -> (n_events,) array and jagged branch
+    name -> values array, with counts available under the ``n<Collection>``
+    name.
+    """
+    if isinstance(node, Cut):
+        return np.asarray(OPS[node.op](data[node.branch], node.value), dtype=bool)
+    if isinstance(node, AnyOf):
+        mask = np.zeros_like(np.asarray(data[node.names[0]], dtype=bool))
+        for n in node.names:
+            mask |= np.asarray(data[n], dtype=bool)
+        return mask
+    if isinstance(node, ObjectSelection):
+        counts = np.asarray(data[f"n{node.collection}"], dtype=np.int64)
+        passing = None
+        for c in node.cuts:
+            vals = data[f"{node.collection}_{c.var}"]
+            m = np.asarray(OPS[c.op](vals, c.value), dtype=bool)
+            passing = m if passing is None else (passing & m)
+        if passing is None:
+            passing = np.ones(int(counts.sum()), dtype=bool)
+        per_event = np.bincount(
+            _event_ids(counts), weights=passing.astype(np.float64), minlength=len(counts)
+        )
+        return per_event >= node.min_count
+    if isinstance(node, HTCut):
+        counts = np.asarray(data[f"n{node.collection}"], dtype=np.int64)
+        vals = np.asarray(data[f"{node.collection}_{node.var}"], dtype=np.float64)
+        passing = np.ones(len(vals), dtype=bool)
+        for c in node.object_cuts:
+            v = data[f"{node.collection}_{c.var}"]
+            passing &= np.asarray(OPS[c.op](v, c.value), dtype=bool)
+        ht = np.bincount(
+            _event_ids(counts), weights=vals * passing, minlength=len(counts)
+        )
+        return np.asarray(OPS[node.op](ht, node.value), dtype=bool)
+    raise TypeError(f"unknown node {type(node)}")
+
+
+def eval_stage(stage: tuple, data: dict, n_events: int) -> np.ndarray:
+    mask = np.ones(n_events, dtype=bool)
+    for node in stage:
+        mask &= eval_node(node, data)
+    return mask

@@ -1,0 +1,13 @@
+from repro.data.codecs import CODECS, decode_basket, encode_basket
+from repro.data.store import Branch, EventStore, FetchStats
+from repro.data.synth import make_nanoaod_like
+
+__all__ = [
+    "CODECS",
+    "encode_basket",
+    "decode_basket",
+    "Branch",
+    "EventStore",
+    "FetchStats",
+    "make_nanoaod_like",
+]

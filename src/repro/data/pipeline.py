@@ -1,0 +1,101 @@
+"""Training input pipeline: near-data skim -> tokens -> global batches.
+
+This is where the paper's contribution plugs into training: the pipeline
+front-end is the two-phase skim (only filter branches are decoded for all
+events; survivors' output branches feed the tokenizer), sharded over the
+data axis.  Batches are a pure function of (seed, step) so restarts replay
+exactly (fault.py's determinism contract).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.engine import SkimEngine, PCIE_128G
+from repro.core.query import parse_query
+
+
+@dataclass
+class PipelineStats:
+    events_seen: int = 0
+    events_kept: int = 0
+    bytes_scanned: int = 0
+    bytes_kept: int = 0
+
+
+class TokenPipeline:
+    """Deterministic synthetic token stream (stand-in corpus).
+
+    Batches derive from a counter-based RNG: batch(step) is identical
+    across restarts and across hosts (each host slices its shard).
+    """
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int, seed: int = 0):
+        self.vocab, self.seq_len, self.global_batch = vocab, seq_len, global_batch
+        self.seed = seed
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        toks = rng.integers(
+            0, self.vocab, (self.global_batch, self.seq_len + 1), dtype=np.int64
+        ).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class SkimTokenPipeline:
+    """Skim-fed pipeline: filter events with a JSON query, quantize the
+    survivors' kinematics into tokens (synthetic physics corpus)."""
+
+    def __init__(
+        self,
+        store,
+        query: dict | str,
+        vocab: int,
+        seq_len: int,
+        global_batch: int,
+        seed: int = 0,
+    ):
+        self.store = store
+        self.query = parse_query(query) if not hasattr(query, "stages") else query
+        self.vocab, self.seq_len, self.global_batch = vocab, seq_len, global_batch
+        self.seed = seed
+        self.stats = PipelineStats()
+        self._tokens = self._build_token_pool()
+
+    def _build_token_pool(self) -> np.ndarray:
+        engine = SkimEngine(self.store, input_link=PCIE_128G)
+        res = engine.run(self.query, mode="near_data")
+        self.stats.events_seen = res.n_input
+        self.stats.events_kept = res.n_passed
+        self.stats.bytes_scanned = res.stats.bytes_fetched
+        self.stats.bytes_kept = res.extras.get("output_bytes", 0)
+        out = res.output
+        cols = []
+        for name in sorted(out.branch_names()):
+            br = out.branches[name]
+            if br.jagged:
+                continue
+            v = out.read_flat(name).astype(np.float64)
+            cols.append(v)
+        if not cols or res.n_passed == 0:
+            return np.zeros(1024, np.int32)
+        mat = np.stack(cols, 1)  # (n_passed, n_flat)
+        # rank-quantize every column into vocab bins, interleave to a stream
+        toks = np.empty(mat.size, np.int32)
+        for j in range(mat.shape[1]):
+            order = np.argsort(np.argsort(mat[:, j]))
+            toks[j :: mat.shape[1]] = (
+                order * max(self.vocab - 1, 1) // max(len(order) - 1, 1)
+            )
+        return toks % self.vocab
+
+    def batch(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        pool = self._tokens
+        n = self.global_batch
+        starts = rng.integers(0, max(len(pool) - self.seq_len - 1, 1), n)
+        idx = starts[:, None] + np.arange(self.seq_len + 1)[None]
+        toks = pool[idx % len(pool)].astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    data_axes,
+    param_pspecs,
+    shardings,
+)
+
+__all__ = [
+    "param_pspecs",
+    "cache_pspecs",
+    "batch_pspec",
+    "data_axes",
+    "shardings",
+]

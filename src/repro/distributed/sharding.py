@@ -1,0 +1,248 @@
+"""Named-axis sharding rules for the (pod, data, model) production mesh.
+
+Strategy (DESIGN.md §5):
+  * tensor parallelism over ``model``: column-parallel in-projections
+    (attention qkv, FFN up/gate, expert dim for MoE), row-parallel
+    out-projections; big embeddings sharded on the vocab dim,
+  * data parallelism over ``pod`` x ``data``: batch dims of activations,
+    token batches and KV caches,
+  * decode KV caches additionally shard the *sequence* dim over ``model``
+    (flash-decoding style): GSPMD turns single-token attention against an
+    S-sharded cache into partial-softmax + cross-shard reduce, which is
+    what bounds per-chip cache bytes at 32k/500k contexts.
+
+Rules are name-based over the parameter tree this repo creates; anything
+unknown falls back to a divisibility heuristic, and everything degrades to
+replication when a dim does not divide.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# last path component -> role
+_COL = {  # shard last dim over model
+    "wq", "wk", "wv", "wq_b", "wk_b", "wv_b", "head",
+    "in_proj", "dt_proj", "w_in", "conv_w",
+}
+_ROW = {  # shard first matrix dim over model
+    "wo", "w_down", "out_proj", "x_proj", "w_if",
+}
+_REPLICATE = {
+    "router", "q_norm", "k_norm", "q_a_norm", "kv_a_norm", "norm", "norm1",
+    "norm2", "final_norm", "b", "b_i", "b_f", "conv_b", "dt_bias", "wq_a",
+    "wkv_a",
+}
+_VEC_MODEL = {"D"}  # (di,) vectors living in the sharded inner dim
+
+
+def _div(n: int, mesh, axis="model") -> bool:
+    return n % mesh.shape[axis] == 0
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# params exempt from ZeRO data-axis sharding:
+#  - 'r': consumed inside the sLSTM per-token scan — sharding re-gathers it
+#    every token (observed 9 TB/step of all-gathers),
+#  - mamba internals (x_proj/dt_proj/conv_w): their small output dims make
+#    GSPMD reshard the (B,S,d_inner,d_state) scan activations instead of
+#    gathering the weight ("involuntary full rematerialization" warnings);
+#    measured 15% lower per-step collective bytes with them exempt, and
+#    they are a negligible share of parameter memory.
+_NO_DATA_SHARD = {"r", "x_proj", "dt_proj", "conv_w"}
+
+
+def _with_data_axis(entries: list, dims, mesh, total: int, name: str = "") -> list:
+    """ZeRO/FSDP hybrid: besides TP over 'model', shard the largest
+    remaining divisible dim of big tensors over 'data' so params and
+    optimizer moments fit per-device HBM (42 GB/dev -> ~3 GB/dev for a
+    67B model on 16x16; without this the big archs simply don't fit)."""
+    if total < (1 << 20) or "data" not in mesh.axis_names or name in _NO_DATA_SHARD:
+        return entries
+    dsize = mesh.shape["data"]
+    best, best_i = 0, None
+    for i, (d, e) in enumerate(zip(dims, entries)):
+        if e is None and d % dsize == 0 and d > best:
+            best, best_i = d, i
+    if best_i is not None:
+        entries[best_i] = "data"
+    return entries
+
+
+def _param_spec(path: tuple[str, ...], leaf, mesh) -> P:
+    name = path[-1]
+    shape = leaf.shape
+    # scanned super-block stacks carry a leading n_super dim
+    off = 1 if ("blocks" in path and leaf.ndim >= 1) else 0
+    dims = shape[off:]
+    nd = len(dims)
+    total = 1
+    for d in dims:
+        total *= d
+
+    def spec(*entries):
+        entries = _with_data_axis(list(entries), dims, mesh, total, name=name)
+        return P(*([None] * off + list(entries)))
+
+    if name in _REPLICATE or nd == 0:
+        return P()
+    if name == "embed":
+        if nd == 2 and _div(dims[0], mesh):
+            return spec("model", None)  # vocab-sharded
+        return P()
+    if name in _VEC_MODEL and nd == 1:
+        return spec("model") if _div(dims[0], mesh) else P()
+    if "ffn" in path and name in ("w_gate", "w_up", "w_down") and nd == 3:
+        # MoE experts: expert-parallel over model
+        if _div(dims[0], mesh):
+            return spec("model", None, None)
+        return spec(None, None, "model") if _div(dims[2], mesh) else P()
+    if name in ("w_gate", "w_up"):  # dense MLP column-parallel
+        return spec(None, "model") if nd == 2 and _div(dims[1], mesh) else P()
+    if name in _COL:
+        if _div(dims[-1], mesh):
+            return spec(*([None] * (nd - 1) + ["model"]))
+        return spec(*([None] * nd))
+    if name in _ROW:
+        if _div(dims[0], mesh):
+            return spec(*(["model"] + [None] * (nd - 1)))
+        return spec(*([None] * nd))
+    if name in ("A_log",):
+        return spec("model", None) if _div(dims[0], mesh) else P()
+    if name == "r":  # sLSTM recurrent (4, H, dh, dh)
+        return spec(None, None, None, "model") if _div(dims[-1], mesh) else P()
+    if name in ("wq", "wk", "wv") and nd == 3:  # mLSTM per-head (H, dh, dh)
+        return spec(None, None, "model") if _div(dims[-1], mesh) else P()
+    # fallback: shard the biggest divisible dim
+    best, best_i = 0, None
+    for i, d in enumerate(dims):
+        if _div(d, mesh) and d > best and d >= 1024:
+            best, best_i = d, i
+    ent = [None] * nd
+    if best_i is not None:
+        ent[best_i] = "model"
+    return spec(*ent)
+
+
+def _fsdp_spec(path: tuple[str, ...], leaf, mesh) -> P:
+    """ZeRO-3 / weight-gathered DP: every big tensor sharded over the FULL
+    device set (all mesh axes) on its largest divisible dim; activations
+    are batch-sharded over the full set too (see batch_pspec strategy).
+    GSPMD all-gathers weights per layer — for batch-dominant workloads the
+    per-layer weight gather is far cheaper than TP activation reduces."""
+    all_axes = tuple(mesh.axis_names)
+    n_all = 1
+    for a in all_axes:
+        n_all *= mesh.shape[a]
+    off = 1 if "blocks" in path else 0
+    dims = leaf.shape[off:]
+    best, best_i = 0, None
+    for i, d in enumerate(dims):
+        if d % n_all == 0 and d > best:
+            best, best_i = d, i
+    if best_i is None or best < n_all:
+        return P()
+    ent = [None] * len(dims)
+    ent[best_i] = all_axes
+    return P(*([None] * off + ent))
+
+
+def param_pspecs(params, mesh, strategy: str = "tp"):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs).
+
+    strategy: 'tp' (2D tensor parallel, default), 'fsdp' (ZeRO-3
+    weight-gathered full DP), 'dp' (replicated params, pure DP).
+    """
+
+    def spec_fn(path, leaf):
+        if strategy == "dp":
+            return P()
+        if strategy == "fsdp":
+            return _fsdp_spec(path, leaf, mesh)
+        return _param_spec(path, leaf, mesh)
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(tree)]
+            return type(tree)(t) if not isinstance(tree, tuple) else tuple(t)
+        return spec_fn(path, tree)
+
+    return walk(params, ())
+
+
+def _cache_spec(path: tuple[str, ...], leaf, mesh) -> P:
+    name = path[-1]
+    off = 1 if "blocks" in path else 0
+    dims = leaf.shape[off:]
+    nd = len(dims)
+    # batch dim shards over (pod, data) only when divisible (long_500k has
+    # global_batch=1 -> replicate)
+    dp_size = 1
+    for a in data_axes(mesh):
+        dp_size *= mesh.shape[a]
+    dp = data_axes(mesh) if (nd >= 1 and dims[0] % dp_size == 0) else None
+
+    def spec(*entries):
+        return P(*([None] * off + list(entries)))
+
+    if name in ("k", "v"):  # (B, S, Hkv, hd) — sequence-sharded
+        return spec(dp, "model" if _div(dims[1], mesh) else None, None, None)
+    if name in ("c_kv", "k_rope"):  # (B, S, r)
+        return spec(dp, "model" if _div(dims[1], mesh) else None, None)
+    if name == "ssm":  # (B, di, ds)
+        return spec(dp, "model" if _div(dims[1], mesh) else None, None)
+    if name == "conv":  # (B, K-1, di)
+        return spec(dp, None, "model" if _div(dims[2], mesh) else None)
+    if name == "C":  # mLSTM (B, H, dh, dh)
+        return spec(dp, None, "model" if _div(dims[2], mesh) else None, None)
+    if name in ("n", "h", "c"):  # (B, H, dh)
+        return spec(dp, None, "model" if _div(dims[2], mesh) else None)
+    if name == "m":
+        return spec(*([dp] + [None] * (nd - 1)))
+    return spec(*([dp] + [None] * (nd - 1)))
+
+
+def cache_pspecs(cache, mesh):
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = [walk(v, path + (str(i),)) for i, v in enumerate(tree)]
+            return tuple(t) if isinstance(tree, tuple) else t
+        return _cache_spec(path, tree, mesh)
+
+    return walk(cache, ())
+
+
+def batch_pspec(mesh, global_batch: int | None = None, strategy: str = "tp") -> P:
+    # fsdp/dp: the model axis joins data parallelism for the batch dim
+    axes = (
+        tuple(mesh.axis_names) if strategy in ("fsdp", "dp") else data_axes(mesh)
+    )
+    if global_batch is not None:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if global_batch % n:
+            axes = data_axes(mesh)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            if global_batch % n:
+                return P(None, None)
+    return P(axes, None)
+
+
+def shardings(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the skim data plane + model-plane hot spots.
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd public wrapper
+in ``ops.py``; tests sweep shapes/dtypes and assert allclose.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.predicate_eval import Group, Program, compile_query
+
+__all__ = ["ops", "ref", "Group", "Program", "compile_query"]

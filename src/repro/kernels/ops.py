@@ -1,0 +1,143 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False when a TPU
+backend is present; callers can override.  Shape guards pad inputs to the
+kernels' tile multiples and slice results back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import basket_decode as _bd
+from repro.kernels import flash_attention as _fa
+from repro.kernels import predicate_eval as _pe
+from repro.kernels import stream_compact as _sc
+from repro.kernels.predicate_eval import Program, compile_query  # re-export
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: np.ndarray | jnp.ndarray, axis: int, multiple: int, value=0):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def predicate_eval(terms, valid, weights, program: Program, interpret=None):
+    """(T,E,K),(G,E,K),(G,E,K) -> (E,) int32 mask; E padded internally."""
+    interpret = default_interpret() if interpret is None else interpret
+    tile = min(_pe.EVENT_TILE, max(128, terms.shape[1]))
+    tile = 1 << (tile - 1).bit_length()  # pow2 for clean padding
+    terms_p, E = _pad_to(jnp.asarray(terms, jnp.float32), 1, tile)
+    valid_p, _ = _pad_to(jnp.asarray(valid, jnp.float32), 1, tile)
+    weights_p, _ = _pad_to(jnp.asarray(weights, jnp.float32), 1, tile)
+    out = _pe.predicate_eval(
+        terms_p, valid_p, weights_p, program=program, interpret=interpret,
+        event_tile=tile,
+    )
+    return out[:E]
+
+
+def stream_compact(payload, mask, interpret=None):
+    """(E,D),(E,) -> packed (E,D), count. E padded internally."""
+    interpret = default_interpret() if interpret is None else interpret
+    tile = min(_sc.EVENT_TILE, max(128, payload.shape[0]))
+    tile = 1 << (tile - 1).bit_length()
+    payload_p, E = _pad_to(jnp.asarray(payload), 0, tile)
+    mask_p, _ = _pad_to(jnp.asarray(mask, jnp.int32), 0, tile)
+    packed, count = _sc.stream_compact(
+        payload_p, mask_p, interpret=interpret, event_tile=tile
+    )
+    return packed[:E], count
+
+
+def basket_decode_batch(parts_list, out_dtype, interpret=None):
+    """Decode a batch of ``bitpack_raw_parts`` dicts of the same kind.
+
+    Pads plane counts/words to the batch max, runs the kernel once, and
+    returns a list of correctly-sized arrays.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    kind = parts_list[0]["kind"]
+    assert all(p["kind"] == kind for p in parts_list)
+    if kind == 3:  # KIND_RAW_F32: literals — passthrough, nothing to decode
+        return [p["raw"].astype(np.dtype(out_dtype)) for p in parts_list]
+    bits_max = max(p["bits"] for p in parts_list)
+    wpp = [p["n_pad"] // 32 for p in parts_list]
+    w_max = max(wpp)
+    # lane-align word count (128-lane VPU)
+    w_max = int(-(-w_max // 128) * 128)
+
+    N = len(parts_list)
+    planes = np.zeros((N, bits_max, w_max), dtype=np.uint32)
+    firsts = np.zeros((N,), dtype=np.uint32)
+    for i, p in enumerate(parts_list):
+        pw = p["planes"].reshape(max(p["bits"], 1), -1)
+        planes[i, : pw.shape[0], : pw.shape[1]] = pw
+        firsts[i] = p["first"]
+
+    out = _bd.basket_decode(
+        jnp.asarray(planes),
+        jnp.asarray(firsts),
+        kind=kind,
+        n_bits=bits_max,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    out = np.asarray(out)
+    return [out[i, : p["n"]] for i, p in enumerate(parts_list)]
+
+
+def skim_fused(terms, valid, weights, payload, program: Program, interpret=None):
+    """One-pass predicate+compact (beyond-paper fusion).  Returns
+    (packed (E, D) with survivors front-packed globally, count)."""
+    import jax.numpy as jnp  # local: keep module import graph light
+
+    from repro.kernels import skim_fused as _sf
+
+    interpret = default_interpret() if interpret is None else interpret
+    tile = min(_sf.EVENT_TILE, max(128, terms.shape[1]))
+    tile = 1 << (tile - 1).bit_length()
+    terms_p, E = _pad_to(jnp.asarray(terms, jnp.float32), 1, tile)
+    valid_p, _ = _pad_to(jnp.asarray(valid, jnp.float32), 1, tile)
+    weights_p, _ = _pad_to(jnp.asarray(weights, jnp.float32), 1, tile)
+    payload_p, _ = _pad_to(jnp.asarray(payload), 0, tile)
+    packed_tiles, counts = _sf.skim_fused(
+        terms_p, valid_p, weights_p, payload_p, program=program,
+        interpret=interpret, event_tile=tile,
+    )
+    # stitch tiles at global offsets (same epilogue as stream_compact)
+    D = payload_p.shape[1]
+    n_tiles = packed_tiles.shape[0] // tile
+    tiles = packed_tiles.reshape(n_tiles, tile, D)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+
+    def place(acc, inp):
+        t, off = inp
+        cur = jax.lax.dynamic_slice(acc, (off, 0), (tile, D))
+        return jax.lax.dynamic_update_slice(acc, cur + t, (off, 0)), None
+
+    out0 = jnp.zeros((packed_tiles.shape[0] + tile, D), payload_p.dtype)
+    out, _ = jax.lax.scan(place, out0, (tiles, offsets))
+    return out[:E], counts.sum()
+
+
+def flash_attention(q, k, v, causal=True, sm_scale=None, block_q=None,
+                    block_k=None, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    S = q.shape[2]
+    bq = block_q or min(_fa.DEFAULT_BQ, S)
+    bk = block_k or min(_fa.DEFAULT_BK, S)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, sm_scale=sm_scale, block_q=bq, block_k=bk,
+        interpret=interpret,
+    )

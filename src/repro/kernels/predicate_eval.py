@@ -1,0 +1,197 @@
+"""Pallas predicate-evaluation kernel (TPU target, interpret-validated).
+
+The TPU analogue of SkimROOT's on-DPU filtering loop: a query's selection
+criteria are compiled to a static *program* (term comparisons + group
+reductions) and evaluated over VMEM tiles of padded columnar event data.
+All thresholds/ops are baked into the kernel closure, so the inner body is
+pure vector compares + reductions on the VPU — one pass over each basket.
+
+Data layout (device path): events are dense tiles, collections padded to a
+static ``K`` objects/event with a validity mask — the jagged->padded
+conversion happens once at ingest (``repro.core.neardata``).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import (
+    GROUP_ANY,
+    GROUP_COUNT,
+    GROUP_HT,
+    OP_IDS,
+    apply_op,
+)
+
+EVENT_TILE = 1024  # events per grid step; multiple of 8*128 lanes
+
+
+@dataclass(frozen=True)
+class Group:
+    kind: int  # GROUP_COUNT / GROUP_HT / GROUP_ANY
+    term_ids: tuple[int, ...]
+    ops: tuple[int, ...]
+    thrs: tuple[float, ...]
+    min_count: int = 1
+    cmp_op: int = 0
+    cmp_thr: float = 0.0
+
+
+@dataclass(frozen=True)
+class Program:
+    """Static predicate program: ``T`` terms over ``G`` AND-ed groups."""
+
+    groups: tuple[Group, ...]
+    term_branches: tuple[str, ...]  # branch feeding each term slot
+    group_collections: tuple[str | None, ...]  # validity source per group
+    group_weights: tuple[str | None, ...]  # HT weight branch per group
+
+    @property
+    def n_terms(self) -> int:
+        return len(self.term_branches)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+
+def compile_query(query) -> Program:
+    """Lower a :class:`repro.core.query.Query` to a :class:`Program`."""
+    from repro.core.query import AnyOf, Cut, HTCut, ObjectSelection
+
+    term_branches: list[str] = []
+    groups: list[Group] = []
+    group_colls: list[str | None] = []
+    group_weights: list[str | None] = []
+
+    def add_term(branch: str) -> int:
+        term_branches.append(branch)
+        return len(term_branches) - 1
+
+    for _, stage in query.stages():
+        for node in stage:
+            if isinstance(node, Cut):
+                t = add_term(node.branch)
+                groups.append(
+                    Group(GROUP_COUNT, (t,), (OP_IDS[node.op],), (float(node.value),))
+                )
+                group_colls.append(None)
+                group_weights.append(None)
+            elif isinstance(node, AnyOf):
+                ids = tuple(add_term(n) for n in node.names)
+                groups.append(
+                    Group(GROUP_ANY, ids, (OP_IDS[">="],) * len(ids), (0.5,) * len(ids))
+                )
+                group_colls.append(None)
+                group_weights.append(None)
+            elif isinstance(node, ObjectSelection):
+                ids, ops, thrs = [], [], []
+                for c in node.cuts:
+                    ids.append(add_term(f"{node.collection}_{c.var}"))
+                    ops.append(OP_IDS[c.op])
+                    thrs.append(float(c.value))
+                groups.append(
+                    Group(
+                        GROUP_COUNT,
+                        tuple(ids),
+                        tuple(ops),
+                        tuple(thrs),
+                        min_count=node.min_count,
+                    )
+                )
+                group_colls.append(node.collection)
+                group_weights.append(None)
+            elif isinstance(node, HTCut):
+                ids, ops, thrs = [], [], []
+                for c in node.object_cuts:
+                    ids.append(add_term(f"{node.collection}_{c.var}"))
+                    ops.append(OP_IDS[c.op])
+                    thrs.append(float(c.value))
+                if not ids:  # unconditioned HT still needs a term for shape
+                    ids.append(add_term(f"{node.collection}_{node.var}"))
+                    ops.append(OP_IDS[">="])
+                    thrs.append(-jnp.inf)
+                groups.append(
+                    Group(
+                        GROUP_HT,
+                        tuple(ids),
+                        tuple(ops),
+                        tuple(thrs),
+                        cmp_op=OP_IDS[node.op],
+                        cmp_thr=float(node.value),
+                    )
+                )
+                group_colls.append(node.collection)
+                group_weights.append(f"{node.collection}_{node.var}")
+            else:
+                raise TypeError(f"cannot compile node {type(node)}")
+
+    return Program(
+        tuple(groups), tuple(term_branches), tuple(group_colls), tuple(group_weights)
+    )
+
+
+# ---------------------------------------------------------------------------
+# kernel
+# ---------------------------------------------------------------------------
+
+
+def _predicate_kernel(terms_ref, valid_ref, weights_ref, out_ref, *, program: Program):
+    """One event tile: terms (T, Eb, K), valid (G, Eb, K), weights (G, Eb, K)."""
+    mask = jnp.ones((terms_ref.shape[1],), dtype=jnp.bool_)
+    for g, grp in enumerate(program.groups):
+        if grp.kind == GROUP_ANY:
+            gpass = jnp.zeros_like(mask)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                gpass = gpass | apply_op(terms_ref[t, :, 0], op, thr)
+        else:
+            obj = jnp.ones(terms_ref.shape[1:], dtype=jnp.bool_)  # (Eb, K)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                obj = obj & apply_op(terms_ref[t], op, thr)
+            obj = obj & (valid_ref[g] > 0)
+            if grp.kind == GROUP_COUNT:
+                gpass = obj.astype(jnp.int32).sum(axis=-1) >= grp.min_count
+            else:  # GROUP_HT
+                ht = (weights_ref[g] * obj.astype(jnp.float32)).sum(axis=-1)
+                gpass = apply_op(ht, grp.cmp_op, grp.cmp_thr)
+        mask = mask & gpass
+    out_ref[...] = mask.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))
+def predicate_eval(
+    terms: jnp.ndarray,
+    valid: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    program: Program,
+    interpret: bool = True,
+    event_tile: int = EVENT_TILE,
+) -> jnp.ndarray:
+    """Evaluate the predicate program; returns (E,) int32 survivor mask.
+
+    ``terms`` (T, E, K) float32, ``valid``/``weights`` (G, E, K).  ``E``
+    must be a multiple of ``event_tile`` (the ingest path pads).
+    """
+    T, E, K = terms.shape
+    G = valid.shape[0]
+    assert E % event_tile == 0, (E, event_tile)
+    grid = (E // event_tile,)
+
+    return pl.pallas_call(
+        functools.partial(_predicate_kernel, program=program),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((T, event_tile, K), lambda i: (0, i, 0)),
+            pl.BlockSpec((G, event_tile, K), lambda i: (0, i, 0)),
+            pl.BlockSpec((G, event_tile, K), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((event_tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((E,), jnp.int32),
+        interpret=interpret,
+    )(terms, valid, weights)

@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts ``assert_allclose`` against the function here.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# predicate_eval
+# ---------------------------------------------------------------------------
+
+OP_GT, OP_GE, OP_LT, OP_LE, OP_EQ, OP_NE, OP_ABSLT, OP_ABSGT = range(8)
+
+OP_IDS = {
+    ">": OP_GT,
+    ">=": OP_GE,
+    "<": OP_LT,
+    "<=": OP_LE,
+    "==": OP_EQ,
+    "!=": OP_NE,
+    "abs<": OP_ABSLT,
+    "abs>": OP_ABSGT,
+}
+
+GROUP_COUNT = 0  # count of objects passing all terms >= min_count
+GROUP_HT = 1  # sum(weight * passing) cmp threshold
+GROUP_ANY = 2  # OR over terms (flat boolean branches)
+
+
+def apply_op(x, op_id: int, thr: float):
+    if op_id == OP_GT:
+        return x > thr
+    if op_id == OP_GE:
+        return x >= thr
+    if op_id == OP_LT:
+        return x < thr
+    if op_id == OP_LE:
+        return x <= thr
+    if op_id == OP_EQ:
+        return x == thr
+    if op_id == OP_NE:
+        return x != thr
+    if op_id == OP_ABSLT:
+        return jnp.abs(x) < thr
+    if op_id == OP_ABSGT:
+        return jnp.abs(x) > thr
+    raise ValueError(op_id)
+
+
+def predicate_eval_ref(terms, valid, weights, program) -> jnp.ndarray:
+    """Evaluate a compiled predicate program.
+
+    Args:
+      terms:   (T, E, K) float32 — per-term padded values.
+      valid:   (G, E, K) bool/float — per-group object validity.
+      weights: (G, E, K) float32 — per-group HT weights (zeros if unused).
+      program: static description (see kernels.predicate_eval.Program):
+        groups: list of dicts with keys kind, term_ids, ops, thrs,
+                min_count, cmp_op, cmp_thr.
+    Returns: (E,) bool event mask.
+    """
+    E = terms.shape[1]
+    mask = jnp.ones((E,), dtype=bool)
+    for g, grp in enumerate(program.groups):
+        if grp.kind == GROUP_ANY:
+            gpass = jnp.zeros((E,), dtype=bool)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                gpass = gpass | apply_op(terms[t, :, 0], op, thr)
+        else:
+            obj = jnp.ones(terms.shape[1:], dtype=bool)  # (E, K)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                obj = obj & apply_op(terms[t], op, thr)
+            obj = obj & (valid[g] > 0)
+            if grp.kind == GROUP_COUNT:
+                gpass = obj.sum(axis=-1) >= grp.min_count
+            elif grp.kind == GROUP_HT:
+                ht = (weights[g] * obj.astype(jnp.float32)).sum(axis=-1)
+                gpass = apply_op(ht, grp.cmp_op, grp.cmp_thr)
+            else:
+                raise ValueError(grp.kind)
+        mask = mask & gpass
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# stream_compact
+# ---------------------------------------------------------------------------
+
+
+def stream_compact_ref(payload: jnp.ndarray, mask: jnp.ndarray):
+    """Pack rows of ``payload`` where ``mask`` is true to the front.
+
+    Returns (packed (E, D) with survivors first then zeros, count ()).
+    """
+    E = payload.shape[0]
+    mask = mask.astype(bool)
+    order = jnp.argsort(~mask, stable=True)  # survivors first, stable
+    packed = payload[order]
+    count = mask.sum(dtype=jnp.int32)
+    keep = jnp.arange(E) < count
+    packed = jnp.where(keep[:, None], packed, 0)
+    return packed, count
+
+
+# ---------------------------------------------------------------------------
+# basket_decode
+# ---------------------------------------------------------------------------
+
+
+def basket_decode_ref(planes, firsts, kind: int, n_values: int, out_dtype):
+    """Decode a batch of bit-plane baskets.
+
+    Args:
+      planes: (N, B, W) uint32 — B bit-planes of W words per basket
+              (planes above the basket's true bit width are zero).
+      firsts: (N,) uint32 — first raw value (bit pattern).
+      kind:   static int — 0 int-delta, 1 float-xor, 2 bool.
+      n_values: static — values per basket (W*32 >= n_values).
+    Returns: (N, n_values) array of ``out_dtype``.
+    """
+    N, B, W = planes.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    codes = jnp.zeros((N, W * 32), dtype=jnp.uint32)
+    for j in range(B):
+        bits = (planes[:, j, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+        codes = codes | (bits.reshape(N, W * 32) << jnp.uint32(j))
+    codes = codes[:, :n_values]
+
+    if kind == 2:  # bool
+        return codes.astype(out_dtype)
+    if kind == 0:  # zigzag delta + cumsum
+        u = codes.astype(jnp.uint32)
+        dec = (u >> 1).astype(jnp.int32) ^ -(u & 1).astype(jnp.int32)
+        first = jax.lax.bitcast_convert_type(firsts.astype(jnp.uint32), jnp.int32)
+        dec = dec.at[:, 0].set(first)
+        return jnp.cumsum(dec, axis=1).astype(out_dtype)
+    if kind == 1:  # xor prefix + bitcast
+        codes = codes.at[:, 0].set(firsts)
+        acc = jax.lax.associative_scan(jnp.bitwise_xor, codes, axis=1)
+        return jax.lax.bitcast_convert_type(acc, jnp.float32).astype(out_dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, sm_scale: float | None = None):
+    """(B, H, S, D) reference attention; fp32 accumulation."""
+    B, H, S, D = q.shape
+    scale = sm_scale if sm_scale is not None else 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), v)

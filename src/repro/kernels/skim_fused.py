@@ -1,0 +1,90 @@
+"""Fused predicate-eval + stream-compact kernel (beyond-paper).
+
+The paper evaluates the predicate, then gathers survivors — two passes
+over the event data.  On TPU both fit in one VMEM round trip: each event
+tile evaluates the compiled program AND compacts its surviving payload
+rows via the one-hot MXU permutation in the same kernel body, so the mask
+never travels to HBM.  One pass, one output stream — exactly the "return
+only the filtered data" contract, minus a full HBM round trip of the
+payload + mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.predicate_eval import Program
+from repro.kernels.ref import GROUP_ANY, GROUP_COUNT, apply_op
+
+EVENT_TILE = 512
+
+
+def _fused_kernel(terms_ref, valid_ref, weights_ref, payload_ref,
+                  out_ref, count_ref, *, program: Program):
+    Eb = payload_ref.shape[0]
+    # --- predicate (same body as predicate_eval) ---
+    mask = jnp.ones((Eb,), dtype=jnp.bool_)
+    for g, grp in enumerate(program.groups):
+        if grp.kind == GROUP_ANY:
+            gpass = jnp.zeros_like(mask)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                gpass = gpass | apply_op(terms_ref[t, :, 0], op, thr)
+        else:
+            obj = jnp.ones(terms_ref.shape[1:], dtype=jnp.bool_)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                obj = obj & apply_op(terms_ref[t], op, thr)
+            obj = obj & (valid_ref[g] > 0)
+            if grp.kind == GROUP_COUNT:
+                gpass = obj.astype(jnp.int32).sum(axis=-1) >= grp.min_count
+            else:
+                ht = (weights_ref[g] * obj.astype(jnp.float32)).sum(axis=-1)
+                gpass = apply_op(ht, grp.cmp_op, grp.cmp_thr)
+        mask = mask & gpass
+
+    # --- compact (same body as stream_compact) ---
+    maskf = mask.astype(jnp.float32)
+    pos = jnp.cumsum(maskf) - maskf
+    rows = jax.lax.broadcasted_iota(jnp.float32, (Eb, Eb), 0)
+    onehot = (rows == pos[None, :]) & mask[None, :]
+    out_ref[...] = jnp.dot(
+        onehot.astype(jnp.float32),
+        payload_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+    count_ref[0] = mask.astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))
+def skim_fused(terms, valid, weights, payload, *, program: Program,
+               interpret: bool = True, event_tile: int = EVENT_TILE):
+    """One-pass skim: (T,E,K),(G,E,K),(G,E,K),(E,D) -> per-tile packed
+    payload (E, D) + per-tile survivor counts (E/tile,)."""
+    T, E, K = terms.shape
+    G = valid.shape[0]
+    D = payload.shape[1]
+    assert E % event_tile == 0
+    n_tiles = E // event_tile
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, program=program),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((T, event_tile, K), lambda i: (0, i, 0)),
+            pl.BlockSpec((G, event_tile, K), lambda i: (0, i, 0)),
+            pl.BlockSpec((G, event_tile, K), lambda i: (0, i, 0)),
+            pl.BlockSpec((event_tile, D), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((event_tile, D), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, D), payload.dtype),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(terms, valid, weights, payload)

@@ -1,0 +1,90 @@
+"""Pallas stream-compaction kernel — "return only the filtered data".
+
+TPU adaptation: compaction is a data-dependent permutation, which the VPU
+cannot scatter directly.  Instead each event tile builds a one-hot
+permutation matrix from the exclusive prefix-sum of the survivor mask and
+*matmuls* the payload through it — turning an irregular gather into an MXU
+operation (DESIGN.md §6).  Tiles are then stitched by a small jnp scan
+using the per-tile counts.
+
+Two-pass structure:
+  pass 1 (in-kernel): tile-local compaction + survivor count per tile,
+  pass 2 (jnp):       place each tile's packed rows at the global offset.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EVENT_TILE = 512  # rows per tile; one-hot matmul is (512, 512) x (512, D)
+
+
+def _compact_kernel(payload_ref, mask_ref, out_ref, count_ref):
+    Eb = payload_ref.shape[0]
+    mask = mask_ref[...] > 0  # (Eb,)
+    maskf = mask.astype(jnp.float32)
+    # exclusive prefix sum -> destination row for each surviving row
+    pos = jnp.cumsum(maskf) - maskf  # (Eb,) float32, integral values
+    rows = jax.lax.broadcasted_iota(jnp.float32, (Eb, Eb), 0)  # dest index j
+    # one-hot permutation: P[j, i] = 1 iff row i survives and lands at j
+    onehot = (rows == pos[None, :]) & mask[None, :]
+    out_ref[...] = jnp.dot(
+        onehot.astype(jnp.float32),
+        payload_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+    count_ref[0] = mask.astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "event_tile"))
+def stream_compact(
+    payload: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    event_tile: int = EVENT_TILE,
+):
+    """Pack surviving rows of ``payload`` ((E, D), any float/int dtype) to the
+    front; zero-fill the tail.  Returns (packed (E, D), count ()).
+    """
+    E, D = payload.shape
+    assert E % event_tile == 0, (E, event_tile)
+    n_tiles = E // event_tile
+
+    packed_tiles, counts = pl.pallas_call(
+        _compact_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((event_tile, D), lambda i: (i, 0)),
+            pl.BlockSpec((event_tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((event_tile, D), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, D), payload.dtype),
+            jax.ShapeDtypeStruct((n_tiles,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(payload, mask.astype(jnp.int32))
+
+    # pass 2: stitch tiles at global offsets (host-side jnp scan)
+    tiles = packed_tiles.reshape(n_tiles, event_tile, D)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+
+    def place(acc, inp):
+        # rows beyond each tile's survivor count are zero, and tiles write
+        # to disjoint [off, off+count) ranges — accumulate-add is exact.
+        tile, off = inp
+        cur = jax.lax.dynamic_slice(acc, (off, 0), (event_tile, D))
+        acc = jax.lax.dynamic_update_slice(acc, cur + tile, (off, 0))
+        return acc, None
+
+    out0 = jnp.zeros((E + event_tile, D), payload.dtype)
+    out, _ = jax.lax.scan(place, out0, (tiles, offsets))
+    return out[:E], counts.sum()

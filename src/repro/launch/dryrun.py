@@ -1,0 +1,381 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Debug override (small fleets compile faster while iterating); production
+# dry-runs use the 512 default above.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production mesh; record memory/cost/collective analysis.
+
+Two artifacts per cell:
+
+  * **production compile** — the deployment config (scan-over-layers,
+    remat, chunked loss/attention/MoE).  Its success proves the sharding
+    is coherent; its ``memory_analysis`` is the fits-in-HBM evidence.
+  * **cost probes** — XLA's ``cost_analysis`` counts while-loop bodies
+    ONCE (verified in EXPERIMENTS.md §Dry-run), so scanned/chunked
+    programs under-report FLOPs.  We therefore lower two *unrolled*
+    variants with 1 and 2 super-block repetitions and no inner chunk
+    loops; ``body = probe2 - probe1`` is the exact per-super-block cost
+    and ``total = probe1 + (n_super - 1) * body`` reconstructs the full
+    program (plus an analytic term for the sLSTM token scan, the one loop
+    that cannot be unrolled).  All probe numbers are per-device, matching
+    the roofline's per-chip terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.distributed.sharding import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import decode_step, init_cache, init_params, logits_fn
+from repro.train.loop import TrainConfig, make_train_step
+from repro.train.optim import adamw_init
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# op mnemonics incl. async start forms; "-done" carries no new bytes
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(.*?)\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Result bytes of every collective op in the optimized HLO (per device)."""
+    out = {k: 0 for k in _COLLECTIVE_KINDS}
+    counts = {k: 0 for k in _COLLECTIVE_KINDS}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_part, kind = m.groups()
+        out[kind] += _shapes_bytes(shape_part)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def input_specs(cfg, shape_spec, mesh, strategy="tp"):
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for every model input."""
+    B, S = shape_spec.global_batch, shape_spec.seq_len
+    bspec = batch_pspec(mesh, global_batch=B, strategy=strategy)
+    sds = jax.ShapeDtypeStruct
+    if shape_spec.kind in ("train", "prefill"):
+        if cfg.frontend_dim:
+            tokens = sds((B, S, cfg.frontend_dim), jnp.bfloat16)
+            tspec = P(bspec[0], None, None)
+        else:
+            tokens = sds((B, S), jnp.int32)
+            tspec = bspec
+        if shape_spec.kind == "train":
+            labels = sds((B, S), jnp.int32)
+            return {"tokens": tokens, "labels": labels}, {
+                "tokens": tspec,
+                "labels": bspec,
+            }
+        return {"tokens": tokens}, {"tokens": tspec}
+    # decode: one new token against an S-long cache
+    return (
+        {"tokens": sds((B, 1), jnp.int32), "pos": sds((B,), jnp.int32)},
+        {"tokens": P(bspec[0], None), "pos": P(bspec[0])},
+    )
+
+
+def _build_lowerable(cfg, spec, mesh, donate=True, strategy="tp"):
+    B, S = spec.global_batch, spec.seq_len
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(params_sds, mesh, strategy=strategy)
+    psh = shardings(pspecs, mesh)
+    inputs, ispecs = input_specs(cfg, spec, mesh, strategy=strategy)
+    ish = shardings(ispecs, mesh)
+
+    if spec.kind == "train":
+        tcfg = TrainConfig(microbatches=int(dict(cfg.extra).get("microbatches", 1)))
+        step_fn = make_train_step(cfg, tcfg)
+        opt_sds = jax.eval_shape(lambda: adamw_init(params_sds))
+        osh = {"m": shardings(pspecs, mesh), "v": shardings(pspecs, mesh)}
+        rep = NamedSharding(mesh, P())
+        fn = jax.jit(
+            step_fn,
+            in_shardings=(psh, osh, ish, rep),
+            out_shardings=(psh, osh, {"loss": rep, "grad_norm": rep, "lr": rep}),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        args = (params_sds, opt_sds, inputs, jax.ShapeDtypeStruct((), jnp.int32))
+    elif spec.kind == "prefill":
+        fn = jax.jit(
+            lambda p, t: logits_fn(p, cfg, t, last_only=True),
+            in_shardings=(psh, ish["tokens"]),
+        )
+        args = (params_sds, inputs["tokens"])
+    else:  # decode
+        cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, S))
+        cspecs = cache_pspecs(cache_sds, mesh)
+        csh = shardings(cspecs, mesh)
+        fn = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+            in_shardings=(psh, csh, ish["tokens"], ish["pos"]),
+            donate_argnums=(1,) if donate else (),
+        )
+        args = (params_sds, cache_sds, inputs["tokens"], inputs["pos"])
+    return fn, args, params_sds
+
+
+def _compile_and_analyze(fn, args, mesh):
+    with mesh:
+        t0 = time.perf_counter()
+        lowered = fn.lower(*args)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # noqa: BLE001
+        mem_d = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        cost_d = {
+            "flops": float(cost.get("flops", -1)),
+            "bytes": float(cost.get("bytes accessed", -1)),
+            "transcendentals": float(cost.get("transcendentals", -1)),
+        }
+    except Exception as e:  # noqa: BLE001
+        cost_d = {"error": str(e), "flops": 0.0, "bytes": 0.0}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem_d,
+        "cost": cost_d,
+        "collectives": coll,
+        "hlo_bytes": len(hlo),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cost probes: unrolled k-super variants -> trip-count-corrected totals
+# ---------------------------------------------------------------------------
+
+
+def _probe_cfg(cfg, k: int):
+    p, n_super, tail = cfg.super_block()
+    head = cfg.moe.first_k_dense if cfg.moe else 0
+    # probes force microbatches=1: grad accumulation splits the same total
+    # flops/bytes across an (uncounted) scan, so totals match production
+    extra = tuple(kv for kv in cfg.extra if kv[0] != "microbatches")
+    return cfg.with_(
+        n_layers=head + p * k + tail,
+        scan_layers=False,
+        attn_chunk=0,
+        loss_chunk=0,
+        moe_chunk=0,
+        ssm_chunk=0,
+        extra=extra,
+    )
+
+
+def _slstm_correction(cfg, spec) -> float:
+    """Analytic per-device FLOPs for the sLSTM token scan the probes can't
+    unroll: recurrent einsum 2*4*H*dh^2 per token per layer."""
+    n_slstm = sum(1 for k, _ in cfg.layer_kinds() if k == "slstm")
+    if not n_slstm:
+        return 0.0
+    B, S = spec.global_batch, spec.seq_len
+    if spec.kind == "decode":
+        S = 1
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    fwd = 2.0 * 4 * H * dh * dh * B * S * n_slstm
+    mult = 3.0 if spec.kind == "train" else 1.0
+    return fwd * mult  # global; converted to per-device by caller
+
+
+def cost_probes(arch: str, shape_name: str, mesh, strategy="tp") -> dict:
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    _, n_super, _ = cfg.super_block()
+
+    res = {}
+    for k in (1, 2):
+        fn, args, _ = _build_lowerable(
+            _probe_cfg(cfg, k), spec, mesh, donate=False, strategy=strategy
+        )
+        res[k] = _compile_and_analyze(fn, args, mesh)
+
+    f1, f2 = res[1]["cost"]["flops"], res[2]["cost"]["flops"]
+    b1, b2 = res[1]["cost"]["bytes"], res[2]["cost"]["bytes"]
+    c1 = res[1]["collectives"]["total_bytes"]
+    c2 = res[2]["collectives"]["total_bytes"]
+    scale = n_super - 1
+    slstm_extra = _slstm_correction(cfg, spec) / mesh.devices.size
+
+    corrected = {
+        "n_super": n_super,
+        "flops": f1 + scale * (f2 - f1) + slstm_extra,
+        "bytes": b1 + scale * (b2 - b1),
+        "collective_bytes": c1 + scale * (c2 - c1),
+        "slstm_extra_flops": slstm_extra,
+        "probe1": {"flops": f1, "bytes": b1, "coll": c1,
+                   "compile_s": res[1]["compile_s"]},
+        "probe2": {"flops": f2, "bytes": b2, "coll": c2,
+                   "compile_s": res[2]["compile_s"]},
+        "collectives_by_kind": {
+            kind: res[1]["collectives"]["bytes"][kind]
+            + scale
+            * (res[2]["collectives"]["bytes"][kind] - res[1]["collectives"]["bytes"][kind])
+            for kind in _COLLECTIVE_KINDS
+        },
+    }
+    return corrected
+
+
+def lower_cell(arch: str, shape_name: str, mesh, verbose=True, probes=True,
+               strategy="tp"):
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+
+    fn, args, params_sds = _build_lowerable(cfg, spec, mesh, strategy=strategy)
+    prod = _compile_and_analyze(fn, args, mesh)
+
+    n_params = sum(
+        int(jnp.prod(jnp.array(x.shape))) for x in jax.tree.leaves(params_sds)
+    )
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": spec.kind,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": int(mesh.devices.size),
+        "n_params": n_params,
+        "batch": spec.global_batch,
+        "seq": spec.seq_len,
+        "strategy": strategy,
+        "production": prod,
+    }
+    if probes:
+        rec["corrected"] = cost_probes(arch, shape_name, mesh, strategy=strategy)
+    if verbose:
+        corr = rec.get("corrected", {})
+        print(
+            f"[dryrun] {arch} x {shape_name} ({spec.kind}) "
+            f"{rec['mesh']}: compile {prod['compile_s']:.1f}s "
+            f"flops/dev={corr.get('flops', prod['cost'].get('flops', 0)):.3e} "
+            f"coll/dev={corr.get('collective_bytes', 0)/1e9:.3f} GB",
+            flush=True,
+        )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--strategy", default="tp", choices=["tp", "fsdp", "dp"])
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    mesh_names = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = n_skip = 0
+    failures = []
+    for mesh_name in mesh_names:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        for arch in archs:
+            shape_names = cells(arch) if args.shape == "all" else [args.shape]
+            for shape_name in shape_names:
+                if shape_name not in cells(arch):
+                    print(f"[dryrun] SKIP {arch} x {shape_name} (not applicable)")
+                    n_skip += 1
+                    continue
+                suffix = "" if args.strategy == "tp" else f"__{args.strategy}"
+                path = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+                )
+                if os.path.exists(path) and not args.force:
+                    print(f"[dryrun] cached {path}", flush=True)
+                    n_ok += 1
+                    continue
+                try:
+                    rec = lower_cell(
+                        arch, shape_name, mesh, probes=not args.no_probes,
+                        strategy=args.strategy,
+                    )
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    n_ok += 1
+                except Exception:  # noqa: BLE001
+                    n_fail += 1
+                    failures.append((arch, shape_name, mesh_name))
+                    print(f"[dryrun] FAIL {arch} x {shape_name} ({mesh_name})")
+                    traceback.print_exc()
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    for f in failures:
+        print(f"[dryrun]   failed: {f}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

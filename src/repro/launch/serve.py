@@ -1,0 +1,66 @@
+"""Skim service driver — the paper's user-facing workflow (Fig. 3).
+
+Accepts the JSON query format (Fig. 2c) and runs the near-data skim,
+returning the filtered store plus the per-operation breakdown, exactly the
+measurement the paper reports.  ``--mode`` selects the compared systems
+(client_plain / client_opt / server_side / near_data) and ``--gbps`` the
+client link tier.
+
+  PYTHONPATH=src python -m repro.launch.serve --query query.json \
+      --events 50000 --mode near_data --gbps 1
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core.engine import NetworkModel, SkimEngine
+from repro.data.store import EventStore
+from repro.data.synth import make_nanoaod_like
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--query", required=True, help="JSON query file or '-' for stdin")
+    ap.add_argument("--store", default="", help="input .skim file (default: synthetic)")
+    ap.add_argument("--events", type=int, default=50_000)
+    ap.add_argument("--n-hlt", type=int, default=64)
+    ap.add_argument("--n-filler", type=int, default=50)
+    ap.add_argument("--codec", default="bitpack", choices=["bitpack", "zlib", "raw"])
+    ap.add_argument("--mode", default="near_data",
+                    choices=["client_plain", "client_opt", "server_side", "near_data"])
+    ap.add_argument("--gbps", type=float, default=1.0)
+    ap.add_argument("--out", default="", help="write the filtered store here")
+    args = ap.parse_args()
+
+    if args.query == "-":
+        query = json.load(sys.stdin)
+    else:
+        with open(args.query) as f:
+            query = json.load(f)
+
+    if args.store:
+        store = EventStore.load(args.store)
+    else:
+        store = make_nanoaod_like(
+            args.events, n_hlt=args.n_hlt, n_filler=args.n_filler, codec=args.codec
+        )
+
+    engine = SkimEngine(store, input_link=NetworkModel(args.gbps, rtt_s=0.010))
+    res = engine.run(query, mode=args.mode)
+
+    print(f"[serve] mode={res.mode} passed {res.n_passed}/{res.n_input} "
+          f"({100*res.selectivity:.2f}%)")
+    print(f"[serve] plan: {res.plan.describe()}")
+    for k, v in res.breakdown.as_dict().items():
+        print(f"[serve]   {k:16s} {v:8.3f}s")
+    print(f"[serve] busy fraction {res.busy_fraction:.2f}")
+    if args.out:
+        res.output.save(args.out)
+        print(f"[serve] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

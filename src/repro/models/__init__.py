@@ -1,0 +1,20 @@
+from repro.models.config import ModelConfig, MoESpec
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoESpec",
+    "init_params",
+    "init_cache",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+]

@@ -1,0 +1,224 @@
+"""Attention mixers: GQA/MQA/MHA, sliding-window, and MLA (DeepSeek-V2).
+
+Train path supports q-chunked online-softmax (jnp flash) for long
+sequences; decode path updates a preallocated KV cache at ``pos``.
+MLA caches the 512-dim compressed KV + the shared rope key — the
+architecture's KV-compression property survives into serving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _init, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg, dtype):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, H * hd), dtype=dtype),
+        "wk": _init(ks[1], (d, Hkv * hd), dtype=dtype),
+        "wv": _init(ks[2], (d, Hkv * hd), dtype=dtype),
+        "wo": _init(ks[3], (H * hd, d), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(params, cfg, x, positions):
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ params["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,H,D), k/v: (B,Sk,Hkv,D), mask: (Sq,Sk) or (B,Sq,Sk) or None."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    qh = q.reshape(B, Sq, Hkv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qh, k).astype(jnp.float32) * scale
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        logits = jnp.where(m[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _causal_window_mask(Sq, Sk, q_off, window):
+    rows = q_off + jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    m = rows >= cols
+    if window:
+        m = m & (cols > rows - window)
+    return m
+
+
+def attn_forward(params, cfg, x, positions, local: bool = False):
+    """Full-sequence (train/prefill) attention. Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, positions)
+    scale = 1.0 / np.sqrt(cfg.hd)
+    window = cfg.window if local else 0
+
+    if cfg.attn_chunk and S > cfg.attn_chunk and S % cfg.attn_chunk == 0:
+        # q-chunked: peak logits tensor is (B, H, chunk, S)
+        C = cfg.attn_chunk
+        n = S // C
+
+        def body(_, qc_off):
+            qc, off = qc_off
+            mask = _causal_window_mask(C, S, off, window) if cfg.causal else None
+            return _, _sdpa(qc, k, v, mask, scale)
+
+        qs = q.reshape(B, n, C, cfg.n_heads, cfg.hd).swapaxes(0, 1)
+        offs = jnp.arange(n) * C
+        _, outs = jax.lax.scan(body, None, (qs, offs))
+        out = outs.swapaxes(0, 1).reshape(B, S, cfg.n_heads, cfg.hd)
+    else:
+        mask = _causal_window_mask(S, S, 0, window) if cfg.causal else None
+        out = _sdpa(q, k, v, mask, scale)
+
+    return out.reshape(B, S, -1) @ params["wo"], (k, v)
+
+
+def attn_decode(params, cfg, x, cache, pos, local: bool = False):
+    """One-token decode. cache = {'k','v'} (B, S_max, Hkv, hd); pos (B,) int32."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(params, cfg, x, pos[:, None])
+    k_cache, v_cache = cache["k"], cache["v"]
+    S_max = k_cache.shape[1]
+    if local and cfg.window and cfg.window < S_max:
+        # ring buffer over the window
+        slot = pos % cfg.window
+    else:
+        slot = pos
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+    v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+
+    S_c = k_cache.shape[1]
+    if local and cfg.window and cfg.window < S_max:
+        valid = jnp.arange(S_c)[None, :] <= pos[:, None]  # ring: all written slots
+        valid = valid | (pos[:, None] >= cfg.window)
+    else:
+        valid = jnp.arange(S_c)[None, :] <= pos[:, None]
+    scale = 1.0 / np.sqrt(cfg.hd)
+    mask = valid[:, None, :]  # (B, 1, S_c) -> broadcast as (B, Sq=1, Sk)
+    out = _sdpa(q, k_cache, v_cache, mask.astype(bool), scale)
+    return out.reshape(B, 1, -1) @ params["wo"], {"k": k_cache, "v": v_cache}
+
+
+def init_attn_cache(cfg, batch, s_max, dtype, local=False):
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    S = min(cfg.window, s_max) if (local and cfg.window) else s_max
+    return {
+        "k": jnp.zeros((batch, S, Hkv, hd), dtype),
+        "v": jnp.zeros((batch, S, Hkv, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV + decoupled rope key
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    r, rq, rd = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": _init(ks[0], (d, rq), dtype=dtype),
+        "q_a_norm": jnp.ones((rq,), dtype),
+        "wq_b": _init(ks[1], (rq, H * (hd + rd)), dtype=dtype),
+        "wkv_a": _init(ks[2], (d, r + rd), dtype=dtype),
+        "kv_a_norm": jnp.ones((r,), dtype),
+        "wk_b": _init(ks[3], (r, H * hd), dtype=dtype),
+        "wv_b": _init(ks[4], (r, H * hd), dtype=dtype),
+        "wo": _init(ks[5], (H * hd, d), dtype=dtype),
+    }
+
+
+def _mla_qkr(params, cfg, x, positions):
+    B, S, _ = x.shape
+    H, hd, rd = cfg.n_heads, cfg.hd, cfg.rope_head_dim
+    q = rms_norm(x @ params["wq_a"], params["q_a_norm"], cfg.norm_eps) @ params["wq_b"]
+    q = q.reshape(B, S, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"]  # (B, S, r + rd)
+    c_kv = rms_norm(kv[..., : cfg.kv_lora_rank], params["kv_a_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., cfg.kv_lora_rank :][:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]  # shared across heads
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(params, cfg, q_nope, q_rope, c_kv, k_rope, mask):
+    """Score via the compressed cache (absorbed projections)."""
+    B, Sq, H, hd = q_nope.shape
+    r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    wk_b = params["wk_b"].reshape(r, H, hd)
+    wv_b = params["wv_b"].reshape(r, H, hd)
+    # absorb wk_b into q: q_c (B,Sq,H,r)
+    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
+    scale = 1.0 / np.sqrt(hd + rd)
+    logits = (
+        jnp.einsum("bqhr,bkr->bhqk", q_c, c_kv)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        logits = jnp.where(m[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+    ctx = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv)  # (B,Sq,H,r)
+    out = jnp.einsum("bqhr,rhd->bqhd", ctx, wv_b)
+    return out.reshape(B, Sq, H * hd) @ params["wo"]
+
+
+def mla_forward(params, cfg, x, positions, local: bool = False):
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkr(params, cfg, x, positions)
+    mask = _causal_window_mask(S, S, 0, 0) if cfg.causal else None
+    out = _mla_attend(params, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(params, cfg, x, cache, pos, local: bool = False):
+    B = x.shape[0]
+    q_nope, q_rope, c_new, kr_new = _mla_qkr(params, cfg, x, pos[:, None])
+    bidx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[bidx, pos].set(c_new[:, 0])
+    k_rope = cache["k_rope"].at[bidx, pos].set(kr_new[:, 0])
+    S_c = c_kv.shape[1]
+    mask = (jnp.arange(S_c)[None, :] <= pos[:, None])[:, None, :]
+    out = _mla_attend(params, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg, batch, s_max, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, s_max, cfg.rope_head_dim), dtype),
+    }

@@ -1,0 +1,175 @@
+"""Model configuration covering every assigned architecture family."""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden size
+    n_shared: int = 0  # shared ("always-on") experts
+    shared_d_ff: int = 0  # hidden size of the fused shared-expert FFN
+    every: int = 1  # layer i is MoE if (i - first_k_dense) % every == 0
+    first_k_dense: int = 0  # leading dense-FFN layers (DeepSeek-V2 style)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: int | None = None  # defaults to d_model // n_heads
+    mixer_pattern: tuple[str, ...] = ("attn",)  # cycled across layers
+    window: int = 1024  # sliding window for 'attn_local'
+    causal: bool = True
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+
+    # MLA (DeepSeek-V2)
+    kv_lora_rank: int = 0  # 0 disables MLA
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+
+    moe: MoESpec | None = None
+    mlp_gated: bool = True  # SwiGLU vs plain GeLU 2-matrix MLP
+    tie_embeddings: bool = False
+    frontend_dim: int = 0  # >0: inputs are precomputed frame/patch embeddings
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # execution knobs
+    loss_chunk: int = 512  # sequence chunk for the fused CE loss (0 = single chunk)
+    attn_chunk: int = 0  # q-chunked online-softmax attention when S >= this (0=off)
+    moe_chunk: int = 512  # sequence chunk for MoE dispatch (0 = single chunk)
+    ssm_chunk: int = 128  # sequence chunk for the selective scan (0 = single chunk)
+    remat: str = "full"  # none | full | dots
+    scan_layers: bool = True  # lax.scan over super-blocks vs unrolled python loop
+
+    # SSM / xLSTM
+    d_inner_factor: int = 2
+    d_state: int = 16
+    conv_kernel: int = 4
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+    extra: tuple = ()  # hashable key/value pairs; cfg must stay a static jit arg
+
+    # ------------------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.d_inner_factor * self.d_model
+
+    @property
+    def dtr(self) -> int:
+        return self.dt_rank if self.dt_rank else math.ceil(self.d_model / 16)
+
+    def mixer_kind(self, i: int) -> str:
+        return self.mixer_pattern[i % len(self.mixer_pattern)]
+
+    def ffn_kind(self, i: int) -> str:
+        if self.d_ff == 0 and self.moe is None:
+            return "none"
+        if self.moe is not None:
+            if i < self.moe.first_k_dense:
+                return "dense"
+            if (i - self.moe.first_k_dense) % self.moe.every == 0:
+                return "moe"
+            return "dense" if self.d_ff else "none"
+        return "dense"
+
+    def super_block(self) -> tuple[int, int, int]:
+        """(period, n_scanned_superblocks, n_tail_layers).
+
+        The layer stack is scanned over repetitions of the combined
+        mixer/FFN pattern; ``first_k_dense`` exception layers and the
+        non-dividing remainder are unrolled.
+        """
+        p = len(self.mixer_pattern)
+        if self.moe is not None:
+            p = _lcm(p, self.moe.every)
+        head = self.moe.first_k_dense if self.moe else 0
+        body = self.n_layers - head
+        n_super = body // p
+        tail = body % p
+        return p, n_super, tail
+
+    def layer_kinds(self) -> list[tuple[str, str]]:
+        return [(self.mixer_kind(i), self.ffn_kind(i)) for i in range(self.n_layers)]
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    # -- parameter count (analytic; used for 6ND roofline) -----------------
+
+    def param_counts(self) -> dict:
+        d, hd = self.d_model, self.hd
+        H, Hkv = self.n_heads, self.n_kv_heads
+        counts = {"embed": self.vocab * d}
+        if self.frontend_dim:
+            counts["embed"] = self.frontend_dim * d
+            counts["head"] = d * self.vocab
+        elif not self.tie_embeddings:
+            counts["head"] = d * self.vocab
+        mixer = 0
+        ffn_total = 0
+        moe_active_extra = 0.0
+        for i in range(self.n_layers):
+            kind, fkind = self.mixer_kind(i), self.ffn_kind(i)
+            if kind in ("attn", "attn_local"):
+                if self.kv_lora_rank:
+                    r, rq, rd = self.kv_lora_rank, self.q_lora_rank, self.rope_head_dim
+                    m = d * rq + rq * H * (hd + rd)  # q down/up
+                    m += d * (r + rd)  # kv down + rope k
+                    m += r * H * 2 * hd  # kv up (k_nope, v)
+                    m += H * hd * d  # out
+                else:
+                    m = d * H * hd + 2 * d * Hkv * hd + H * hd * d
+            elif kind == "mamba":
+                di, ds, dtr = self.d_inner, self.d_state, self.dtr
+                m = d * 2 * di + di * self.conv_kernel + di * (dtr + 2 * ds)
+                m += dtr * di + di + di * d + di  # dt proj, A(di,ds)~ + D + out
+                m += di * ds
+            elif kind == "mlstm":
+                di = self.d_inner
+                m = d * 2 * di + di * self.conv_kernel + 3 * di * di // 4 + 2 * di
+                m += di * d
+            elif kind == "slstm":
+                m = 4 * d * d + 4 * d * d // max(self.n_heads, 1) + 4 * d + d * d
+            else:
+                m = 0
+            mixer += m
+            if fkind == "dense":
+                ffn_total += (3 if self.mlp_gated else 2) * d * self.d_ff
+            elif fkind == "moe":
+                sp = self.moe
+                ffn_total += sp.n_experts * 3 * d * sp.d_expert + d * sp.n_experts
+                if sp.n_shared:
+                    sh = sp.shared_d_ff or sp.n_shared * sp.d_expert
+                    ffn_total += 3 * d * sh
+                moe_active_extra += (sp.n_experts - sp.top_k) * 3 * d * sp.d_expert
+        counts["mixer"] = mixer
+        counts["ffn"] = ffn_total
+        counts["norms"] = 2 * self.n_layers * d + d
+        counts["total"] = sum(v for k, v in counts.items() if k != "total")
+        counts["active"] = counts["total"] - moe_active_extra
+        return counts
+
+
+def _lcm(a: int, b: int) -> int:
+    return a * b // math.gcd(a, b)

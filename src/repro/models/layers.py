@@ -1,0 +1,99 @@
+"""Shared model building blocks: norms, MLP, RoPE, chunked CE loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def init_mlp(key, d_model, d_ff, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": _init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": _init(k3, (d_ff, d_model), dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = _init(k1, (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp(params, x):
+    if "w_gate" in params:  # SwiGLU
+        g = jax.nn.silu(x @ params["w_gate"])
+        return (g * (x @ params["w_up"])) @ params["w_down"]
+    return jax.nn.gelu(x @ params["w_up"]) @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused/chunked cross-entropy: never materializes (B, S, V) logits
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(h, embed_out, labels, chunk: int, z_coef: float = 0.0):
+    """h: (B, S, d); embed_out: (d, V); labels: (B, S) int32 -> scalar loss.
+
+    Scans over sequence chunks so the live logits tensor is (B, chunk, V)
+    — with V model-sharded this is what makes 262k-vocab training fit.
+    """
+    B, S, d = h.shape
+    chunk = min(chunk or S, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    def chunk_loss(hc, lc):
+        logits = (hc @ embed_out).astype(jnp.float32)  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold).sum()
+        z = (jnp.square(lse) * z_coef).sum() if z_coef else 0.0
+        return nll + z
+
+    def body(carry, xs):
+        hc, lc = xs
+        return carry + chunk_loss(hc, lc), None
+
+    hs = h[:, : n_chunks * chunk].reshape(B, n_chunks, chunk, d).swapaxes(0, 1)
+    ls = labels[:, : n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    if rem:
+        total = total + chunk_loss(h[:, -rem:], labels[:, -rem:])
+    return total / (B * S)

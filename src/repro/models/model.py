@@ -1,0 +1,372 @@
+"""Model assembler: block patterns, scan-over-layers, train/serve entry points.
+
+The layer stack is grouped into repeating "super-blocks" (the LCM of the
+mixer pattern and the MoE period); parameters for the repeated part are
+stacked with a leading ``n_super`` dim and the stack runs under
+``jax.lax.scan`` — keeping the HLO (and 512-device dry-run compile time)
+independent of depth.  ``first_k_dense`` exception layers and the
+non-dividing remainder are unrolled.
+
+Entry points:
+  * ``forward``     — (B, S) tokens (or frontend embeds) -> final hidden
+  * ``loss_fn``     — forward + chunked CE (never materializes full logits)
+  * ``prefill``     — forward + cache construction (padded to ``s_max``)
+  * ``decode_step`` — one-token serve step against a preallocated cache
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm, xlstm
+from repro.models.config import ModelConfig
+from repro.models.layers import _init, chunked_ce_loss, init_mlp, mlp, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _layer_plan(cfg: ModelConfig):
+    """-> (head_kinds, super_kinds, tail_kinds); each a list of
+    (mixer_kind, ffn_kind) tuples; scanned part repeats super_kinds."""
+    p, n_super, tail = cfg.super_block()
+    head = cfg.moe.first_k_dense if cfg.moe else 0
+    kinds = cfg.layer_kinds()
+    head_kinds = kinds[:head]
+    super_kinds = kinds[head : head + p]
+    tail_kinds = kinds[head + n_super * p :]
+    return head_kinds, super_kinds, tail_kinds, n_super
+
+
+def _init_mixer(key, kind: str, cfg, dtype):
+    if kind in ("attn", "attn_local"):
+        if cfg.kv_lora_rank:
+            return attn.init_mla(key, cfg, dtype)
+        return attn.init_attn(key, cfg, dtype)
+    if kind == "mamba":
+        return ssm.init_mamba(key, cfg, dtype)
+    if kind == "mlstm":
+        return xlstm.init_mlstm(key, cfg, dtype)
+    if kind == "slstm":
+        return xlstm.init_slstm(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _init_block(key, kinds: tuple[str, str], cfg, dtype):
+    mixer_kind, ffn_kind = kinds
+    k1, k2 = jax.random.split(key)
+    p = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "mixer": _init_mixer(k1, mixer_kind, cfg, dtype),
+    }
+    if ffn_kind == "dense":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype, gated=cfg.mlp_gated)
+    elif ffn_kind == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        p["ffn"] = moe_mod.init_moe(k2, cfg, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    head_kinds, super_kinds, tail_kinds, n_super = _layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+
+    if cfg.frontend_dim:
+        embed = _init(keys[0], (cfg.frontend_dim, cfg.d_model), dtype=dtype)
+    else:
+        embed = _init(keys[0], (cfg.vocab, cfg.d_model), scale=0.02, dtype=dtype)
+    params = {"embed": embed, "final_norm": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = _init(keys[1], (cfg.d_model, cfg.vocab), dtype=dtype)
+
+    kh = jax.random.split(keys[2], max(len(head_kinds), 1))
+    params["head_layers"] = [
+        _init_block(kh[i], kinds, cfg, dtype) for i, kinds in enumerate(head_kinds)
+    ]
+
+    # scanned super-blocks: list over pattern positions, each stacked n_super
+    blocks = []
+    for j, kinds in enumerate(super_kinds):
+        kj = jax.random.split(jax.random.fold_in(keys[3], j), max(n_super, 1))
+        per_rep = [_init_block(kj[r], kinds, cfg, dtype) for r in range(n_super)]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_rep))
+    params["blocks"] = blocks
+
+    kt = jax.random.split(keys[4], max(len(tail_kinds), 1))
+    params["tail_layers"] = [
+        _init_block(kt[i], kinds, cfg, dtype) for i, kinds in enumerate(tail_kinds)
+    ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+_MIXER_FWD = {
+    "attn": lambda p, c, x, pos: attn.mla_forward(p, c, x, pos)
+    if c.kv_lora_rank
+    else attn.attn_forward(p, c, x, pos),
+    "attn_local": lambda p, c, x, pos: attn.attn_forward(p, c, x, pos, local=True),
+    "mamba": ssm.mamba_forward,
+    "mlstm": xlstm.mlstm_forward,
+    "slstm": xlstm.slstm_forward,
+}
+
+
+def _apply_block(bp, kinds, cfg, h, positions):
+    mixer_kind, ffn_kind = kinds
+    out, state = _MIXER_FWD[mixer_kind](bp["mixer"], cfg, rms_norm(h, bp["norm1"], cfg.norm_eps), positions)
+    h = h + out
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "dense":
+        h = h + mlp(bp["ffn"], rms_norm(h, bp["norm2"], cfg.norm_eps))
+    elif ffn_kind == "moe":
+        out, aux = moe_mod.moe_apply(bp["ffn"], cfg, rms_norm(h, bp["norm2"], cfg.norm_eps))
+        h = h + out
+    return h, aux, state
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params, cfg: ModelConfig, tokens, positions=None):
+    """tokens: (B, S) int32, or (B, S, frontend_dim) float for stub frontends.
+    Returns (hidden (B, S, d), aux_loss)."""
+    head_kinds, super_kinds, tail_kinds, n_super = _layer_plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+
+    if cfg.frontend_dim:
+        h = tokens.astype(dtype) @ params["embed"]
+        B, S = tokens.shape[:2]
+    else:
+        h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+        B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    aux = jnp.zeros((), jnp.float32)
+    for bp, kinds in zip(params["head_layers"], head_kinds):
+        h, a, _ = _apply_block(bp, kinds, cfg, h, positions)
+        aux = aux + a
+
+    if n_super:
+
+        def body(carry, xs):
+            h, aux = carry
+            for bp, kinds in zip(xs, super_kinds):
+                h, a, _ = _apply_block(bp, kinds, cfg, h, positions)
+                aux = aux + a
+            return (h, aux), None
+
+        if cfg.scan_layers:
+            (h, aux), _ = jax.lax.scan(
+                _remat(body, cfg), (h, aux), tuple(params["blocks"])
+            )
+        else:  # unrolled (cost probes / small models)
+            body_r = _remat(body, cfg)
+            for r in range(n_super):
+                xs = tuple(
+                    jax.tree.map(lambda x: x[r], blk) for blk in params["blocks"]
+                )
+                (h, aux), _ = body_r((h, aux), xs)
+
+    for bp, kinds in zip(params["tail_layers"], tail_kinds):
+        h, a, _ = _apply_block(bp, kinds, cfg, h, positions)
+        aux = aux + a
+
+    return rms_norm(h, params["final_norm"], cfg.norm_eps), aux
+
+
+def _unembed(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels):
+    """Mean next-token CE (labels pre-shifted by the pipeline) + MoE aux."""
+    h, aux = forward(params, cfg, tokens)
+    ce = chunked_ce_loss(h, _unembed(params, cfg), labels, cfg.loss_chunk)
+    return ce + aux
+
+
+def logits_fn(params, cfg: ModelConfig, tokens, last_only: bool = True):
+    h, _ = forward(params, cfg, tokens)
+    if last_only:
+        h = h[:, -1:]
+    return (h @ _unembed(params, cfg)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + one-token decode
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(kinds, cfg, batch, s_max, dtype):
+    mixer_kind, _ = kinds
+    if mixer_kind in ("attn", "attn_local"):
+        if cfg.kv_lora_rank:
+            return attn.init_mla_cache(cfg, batch, s_max, dtype)
+        return attn.init_attn_cache(
+            cfg, batch, s_max, dtype, local=(mixer_kind == "attn_local")
+        )
+    if mixer_kind == "mamba":
+        return ssm.init_mamba_cache(cfg, batch, dtype)
+    if mixer_kind == "mlstm":
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if mixer_kind == "slstm":
+        return xlstm.init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(mixer_kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    dtype = jnp.dtype(cfg.dtype)
+    head_kinds, super_kinds, tail_kinds, n_super = _layer_plan(cfg)
+    mk = lambda kinds: _init_layer_cache(kinds, cfg, batch, s_max, dtype)
+    stack = lambda c: jax.tree.map(
+        lambda x: jnp.tile(x[None], (n_super,) + (1,) * x.ndim), c
+    )
+    return {
+        "head_layers": [mk(k) for k in head_kinds],
+        "blocks": [stack(mk(k)) for k in super_kinds],
+        "tail_layers": [mk(k) for k in tail_kinds],
+    }
+
+
+_MIXER_DEC = {
+    "attn": lambda p, c, x, cache, pos: attn.mla_decode(p, c, x, cache, pos)
+    if c.kv_lora_rank
+    else attn.attn_decode(p, c, x, cache, pos),
+    "attn_local": lambda p, c, x, cache, pos: attn.attn_decode(
+        p, c, x, cache, pos, local=True
+    ),
+    "mamba": ssm.mamba_decode,
+    "mlstm": xlstm.mlstm_decode,
+    "slstm": xlstm.slstm_decode,
+}
+
+
+def _decode_block(bp, cache, kinds, cfg, h, pos):
+    mixer_kind, ffn_kind = kinds
+    out, new_cache = _MIXER_DEC[mixer_kind](
+        bp["mixer"], cfg, rms_norm(h, bp["norm1"], cfg.norm_eps), cache, pos
+    )
+    h = h + out
+    if ffn_kind == "dense":
+        h = h + mlp(bp["ffn"], rms_norm(h, bp["norm2"], cfg.norm_eps))
+    elif ffn_kind == "moe":
+        out, _ = moe_mod.moe_apply(bp["ffn"], cfg, rms_norm(h, bp["norm2"], cfg.norm_eps))
+        h = h + out
+    return h, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One serve step: tokens (B, 1) int32, pos (B,) int32.
+    Returns (logits (B, 1, V) f32, new cache)."""
+    head_kinds, super_kinds, tail_kinds, n_super = _layer_plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+    new_cache = {"head_layers": [], "blocks": None, "tail_layers": []}
+    for bp, c, kinds in zip(params["head_layers"], cache["head_layers"], head_kinds):
+        h, nc = _decode_block(bp, c, kinds, cfg, h, pos)
+        new_cache["head_layers"].append(nc)
+
+    if n_super:
+
+        def body(h, xs):
+            bps, caches = xs
+            ncs = []
+            for bp, c, kinds in zip(bps, caches, super_kinds):
+                h, nc = _decode_block(bp, c, kinds, cfg, h, pos)
+                ncs.append(nc)
+            return h, tuple(ncs)
+
+        if cfg.scan_layers:
+            h, nc_blocks = jax.lax.scan(
+                body, h, (tuple(params["blocks"]), tuple(cache["blocks"]))
+            )
+            new_cache["blocks"] = list(nc_blocks)
+        else:
+            ys = []
+            for r in range(n_super):
+                take = lambda t: tuple(jax.tree.map(lambda x: x[r], b) for b in t)
+                h, ncs = body(h, (take(params["blocks"]), take(cache["blocks"])))
+                ys.append(ncs)
+            # restack to match the scanned layout
+            new_cache["blocks"] = [
+                jax.tree.map(lambda *xs: jnp.stack(xs), *[y[j] for y in ys])
+                for j in range(len(super_kinds))
+            ]
+    else:
+        new_cache["blocks"] = []
+
+    for bp, c, kinds in zip(params["tail_layers"], cache["tail_layers"], tail_kinds):
+        h, nc = _decode_block(bp, c, kinds, cfg, h, pos)
+        new_cache["tail_layers"].append(nc)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h @ _unembed(params, cfg)).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# prefill (real serving path; dry-run lowers decode_step directly)
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens, s_max: int):
+    """Run the prompt through the model, building a cache padded to s_max.
+    Returns (last-token logits (B, V) f32, cache)."""
+    B, S = tokens.shape[:2]
+    cache = init_cache(cfg, B, s_max)
+    h, _ = forward(params, cfg, tokens)
+    logits = (h[:, -1] @ _unembed(params, cfg)).astype(jnp.float32)
+
+    # re-run per-token decode to populate caches exactly (small-scale path;
+    # shares all numerics with decode_step so serve == train semantics)
+    def body(cache, t):
+        tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+        _, cache = decode_step(
+            params, cfg, cache, tok, jnp.full((B,), t, jnp.int32)
+        )
+        return cache, None
+
+    cache, _ = jax.lax.scan(body, cache, jnp.arange(S))
+    return logits, cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_tokens"))
+def generate(params, cfg: ModelConfig, prompt, n_tokens: int, s_max: int = 0):
+    """Greedy decode ``n_tokens`` after ``prompt`` (B, S)."""
+    B, S = prompt.shape
+    s_max = s_max or S + n_tokens
+    logits, cache = prefill(params, cfg, prompt, s_max)
+    tok0 = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+    def body(carry, t):
+        tok, cache = carry
+        logits, cache = decode_step(
+            params, cfg, cache, tok, jnp.full((B,), S, jnp.int32) + t
+        )
+        nxt = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, cache), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (tok0, cache), jnp.arange(n_tokens))
+    return toks.swapaxes(0, 1)  # (B, n_tokens)

@@ -1,0 +1,141 @@
+"""Mixture-of-Experts FFN with gather-based (FLOPs-honest) dispatch.
+
+Instead of the switch-style one-hot dispatch einsum — whose
+``tokens x E x capacity x d`` contraction costs far more FLOPs than the
+experts themselves at E=160 — tokens are *sorted* by expert assignment and
+gathered into per-expert capacity slots with integer indexing.  The HLO
+then contains only the real expert matmuls plus cheap gathers/scatters,
+which keeps ``cost_analysis`` FLOPs ≈ useful FLOPs (important for the
+roofline in EXPERIMENTS.md §Roofline).
+
+Experts are sharded over the ``model`` mesh axis (expert parallelism);
+the dispatch indices are computed replicated and the gather partitions on
+the expert dimension.  Tokens beyond an expert's capacity are dropped
+(standard capacity-factor semantics) and a load-balance auxiliary loss
+keeps the router honest.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+
+def init_moe(key, cfg, dtype):
+    sp = cfg.moe
+    d, de, E = cfg.d_model, sp.d_expert, sp.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _init(ks[0], (d, E), dtype=jnp.float32),  # router in f32
+        "w_gate": _init(ks[1], (E, d, de), dtype=dtype),
+        "w_up": _init(ks[2], (E, d, de), dtype=dtype),
+        "w_down": _init(ks[3], (E, de, d), dtype=dtype),
+    }
+    if sp.n_shared:
+        sh = sp.shared_d_ff or sp.n_shared * de
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _init(kk[0], (d, sh), dtype=dtype),
+            "w_up": _init(kk[1], (d, sh), dtype=dtype),
+            "w_down": _init(kk[2], (sh, d), dtype=dtype),
+        }
+    return p
+
+
+def _dispatch_indices(idx, gates, E: int, cap: int):
+    """idx/gates: (B, C, k) -> slot-filling index/gate tables.
+
+    Returns (im (B, E*cap+1) int32 token index per expert slot (sentinel C
+    = zero-pad token), gate_slot (B, E*cap) f32).
+    """
+    B, C, k = idx.shape
+    Ck = C * k
+    e_flat = idx.reshape(B, Ck)
+    t_flat = jnp.broadcast_to(jnp.arange(C)[:, None], (C, k)).reshape(Ck)
+    t_flat = jnp.broadcast_to(t_flat, (B, Ck))
+    g_flat = gates.reshape(B, Ck)
+
+    order = jnp.argsort(e_flat, axis=-1, stable=True)
+    se = jnp.take_along_axis(e_flat, order, axis=-1)
+    st = jnp.take_along_axis(t_flat, order, axis=-1)
+    sg = jnp.take_along_axis(g_flat, order, axis=-1)
+
+    iota = jnp.broadcast_to(jnp.arange(Ck), (B, Ck))
+    is_new = jnp.concatenate(
+        [jnp.ones((B, 1), bool), se[:, 1:] != se[:, :-1]], axis=-1
+    )
+    run_start = jax.lax.cummax(jnp.where(is_new, iota, 0), axis=1)
+    rank = iota - run_start  # position within this expert's run
+    keep = rank < cap
+
+    slot = se * cap + rank  # (B, Ck) in [0, E*cap)
+    slot = jnp.where(keep, slot, E * cap)  # overflow bucket
+
+    bidx = jnp.arange(B)[:, None]
+    im = jnp.full((B, E * cap + 1), C, jnp.int32)
+    im = im.at[bidx, slot].set(jnp.where(keep, st, C).astype(jnp.int32))
+    gate_slot = jnp.zeros((B, E * cap + 1), jnp.float32)
+    gate_slot = gate_slot.at[bidx, slot].set(jnp.where(keep, sg, 0.0))
+    return im[:, :-1], gate_slot[:, :-1]
+
+
+def _moe_chunk(params, cfg, xc):
+    """xc: (B, C, d) -> (B, C, d), aux-loss scalar."""
+    sp = cfg.moe
+    B, C, d = xc.shape
+    E, k = sp.n_experts, sp.top_k
+    cap = max(int(k * C * sp.capacity_factor / E) + 1, 4)
+
+    logits = (xc.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, C, E)
+    top_p, idx = jax.lax.top_k(probs, k)
+    gates = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style): E * sum_e f_e * P_e
+    pe = probs.mean(axis=(0, 1))
+    fe = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (B * C * k)
+    aux = E * jnp.sum(fe * pe) * sp.router_aux_coef
+
+    im, gate_slot = _dispatch_indices(idx, gates, E, cap)
+
+    x_pad = jnp.concatenate([xc, jnp.zeros((B, 1, d), xc.dtype)], axis=1)
+    disp = jnp.take_along_axis(x_pad, im[..., None], axis=1)  # (B, E*cap, d)
+    disp = disp.reshape(B, E, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", disp, params["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", disp, params["w_up"])
+    eout = jnp.einsum("becf,efd->becd", h, params["w_down"])  # (B, E, cap, d)
+
+    eout = eout.reshape(B, E * cap, d) * gate_slot[..., None].astype(eout.dtype)
+    out = jnp.zeros((B, C + 1, d), eout.dtype)
+    out = out.at[jnp.arange(B)[:, None], im].add(eout)
+    out = out[:, :C]
+
+    if sp.n_shared:
+        sh = params["shared"]
+        g = jax.nn.silu(xc @ sh["w_gate"])
+        out = out + (g * (xc @ sh["w_up"])) @ sh["w_down"]
+    return out, aux
+
+
+def moe_apply(params, cfg, x):
+    """x: (B, S, d). Scans over sequence chunks to bound dispatch memory."""
+    B, S, d = x.shape
+    chunk = cfg.moe_chunk or S
+    C = min(chunk, S)
+    if S % C:
+        C = S  # fallback: single chunk
+    n = S // C
+    if n == 1:
+        return _moe_chunk(params, cfg, x)
+
+    xs = x.reshape(B, n, C, d).swapaxes(0, 1)
+
+    def body(acc, xc):
+        out, aux = _moe_chunk(params, cfg, xc)
+        return acc + aux, out
+
+    aux, outs = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    return outs.swapaxes(0, 1).reshape(B, S, d), aux / n

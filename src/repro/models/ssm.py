@@ -1,0 +1,138 @@
+"""Mamba (S6) selective-state-space mixer.
+
+Train path: chunked associative scan — outer ``lax.scan`` carries the
+(B, d_inner, d_state) SSM state across sequence chunks; within a chunk the
+recurrence h_t = a_t * h_{t-1} + b_t runs as a parallel associative scan.
+This bounds the live (B, Lc, d_inner, d_state) tensor (DESIGN.md §5).
+
+Decode path: single-step recurrence on (ssm state, conv ring buffer) —
+O(1) per token, which is what makes ``long_500k`` run for SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+SSM_CHUNK = 128
+
+
+def init_mamba(key, cfg, dtype):
+    d, di, ds, dtr = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.dtr
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": _init(ks[1], (cfg.conv_kernel, di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _init(ks[2], (di, dtr + 2 * ds), dtype=dtype),
+        "dt_proj": _init(ks[3], (dtr, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+        ),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": _init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, di); w: (K, di) depthwise. state: (B, K-1, di) or None."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else None
+    return out + b, new_state
+
+
+def _ssm_inputs(params, cfg, xz):
+    """xz: (B, S, di) conv'd+silu'd -> (dA (B,S,di,ds) decay, dBx, C)."""
+    ds, dtr = cfg.d_state, cfg.dtr
+    proj = xz @ params["x_proj"]  # (B, S, dtr + 2 ds)
+    dt = jax.nn.softplus(
+        proj[..., :dtr] @ params["dt_proj"] + params["dt_bias"]
+    ).astype(jnp.float32)  # (B, S, di)
+    B_ssm = proj[..., dtr : dtr + ds].astype(jnp.float32)
+    C_ssm = proj[..., dtr + ds :].astype(jnp.float32)
+    A = -jnp.exp(params["A_log"])  # (di, ds)
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (B, S, di, ds)
+    dBx = (dt * xz.astype(jnp.float32))[..., None] * B_ssm[:, :, None, :]
+    return dA, dBx, C_ssm
+
+
+def mamba_forward(params, cfg, x, positions=None):
+    """x: (B, S, d) -> (B, S, d). Returns (out, final_state)."""
+    B, S, d = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in, _ = _causal_conv(x_in, params["conv_w"], params["conv_b"])
+    x_in = jax.nn.silu(x_in)
+
+    Lc = min(cfg.ssm_chunk or S, S)
+    if S % Lc:
+        Lc = S
+    n = S // Lc
+
+    dA, dBx, C_ssm = _ssm_inputs(params, cfg, x_in)
+
+    def chunk_body(h0, xs):
+        dA_c, dBx_c, C_c = xs  # (B, Lc, di, ds), ..., (B, Lc, ds)
+
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        # fold carried state into the first element
+        b_first = dA_c[:, 0] * h0 + dBx_c[:, 0]
+        b_rest = dBx_c[:, 1:]
+        a = dA_c
+        bs = jnp.concatenate([b_first[:, None], b_rest], axis=1)
+        _, hs = jax.lax.associative_scan(combine, (a, bs), axis=1)
+        y = jnp.einsum("blds,bls->bld", hs, C_c)  # (B, Lc, di)
+        return hs[:, -1], y
+
+    def outer(h, xs):
+        h, y = chunk_body(h, xs)
+        return h, y
+
+    reshape = lambda t: t.reshape((B, n, Lc) + t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_final, ys = jax.lax.scan(outer, h0, (reshape(dA), reshape(dBx), reshape(C_ssm)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+
+    y = y + params["D"][None, None] * x_in.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], h_final
+
+
+def mamba_decode(params, cfg, x, cache, pos=None):
+    """x: (B, 1, d); cache: {'ssm': (B, di, ds) f32, 'conv': (B, K-1, di)}."""
+    B = x.shape[0]
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in, conv_state = _causal_conv(
+        x_in, params["conv_w"], params["conv_b"], state=cache["conv"]
+    )
+    x_in = jax.nn.silu(x_in)
+
+    dA, dBx, C_ssm = _ssm_inputs(params, cfg, x_in)  # S=1
+    h = dA[:, 0] * cache["ssm"] + dBx[:, 0]  # (B, di, ds)
+    y = jnp.einsum("bds,bs->bd", h, C_ssm[:, 0])[:, None]  # (B, 1, di)
+    y = y + params["D"][None, None] * x_in.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], {"ssm": h, "conv": conv_state}
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    return {
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    }

@@ -1,0 +1,214 @@
+"""xLSTM mixers: mLSTM (matrix memory, parallel/quadratic train form,
+O(1) recurrent decode) and sLSTM (scalar memory, sequential scan).
+
+Follows the xLSTM paper's stabilized exponential gating.  mLSTM q/k/v use
+block-diagonal per-head projections (that is what keeps xlstm-1.3b at
+1.3B params); sLSTM uses block-diagonal recurrent matrices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, dtype):
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": _init(ks[1], (cfg.conv_kernel, di), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": _init(ks[2], (H, dh, dh), dtype=dtype),
+        "wk": _init(ks[3], (H, dh, dh), dtype=dtype),
+        "wv": _init(ks[4], (H, dh, dh), dtype=dtype),
+        "w_if": _init(ks[5], (di, 2 * H), scale=0.01, dtype=jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # forget-gate bias: remember
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[6], (di, d), dtype=dtype),
+    }
+
+
+def _mlstm_qkv_gates(params, cfg, x, conv_state=None):
+    from repro.models.ssm import _causal_conv
+
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di = cfg.d_inner
+    dh = di // H
+    xz = x @ params["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(xm, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    xh = xc.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"]) / jnp.sqrt(float(dh))
+    v = jnp.einsum("bshd,hde->bshe", xh, params["wv"])
+
+    gates = xc.astype(jnp.float32) @ params["w_if"]  # (B, S, 2H)
+    i_pre = gates[..., :H] + params["b_i"]
+    f_pre = gates[..., H:] + params["b_f"]
+    return q, k, v, i_pre, f_pre, z, new_conv
+
+
+def mlstm_forward(params, cfg, x, positions=None):
+    """Parallel (quadratic) stabilized mLSTM. Returns (out, final_state)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di = cfg.d_inner
+    dh = di // H
+    q, k, v, i_pre, f_pre, z, _ = _mlstm_qkv_gates(params, cfg, x)
+
+    logf = jax.nn.log_sigmoid(f_pre)  # (B, S, H)
+    F = jnp.cumsum(logf, axis=1)  # (B, S, H)
+    # D[t, s] = F_t - F_s + i_s  for s <= t
+    dmat = F[:, :, None, :] - F[:, None, :, :] + i_pre[:, None, :, :]  # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, NEG_INF)
+    m = dmat.max(axis=2, keepdims=True)  # (B, t, 1, H) row stabilizer
+    dexp = jnp.exp(dmat - m)  # (B, t, s, H)
+
+    logits = jnp.einsum("bthe,bshe->btsh", q.astype(jnp.float32), k.astype(jnp.float32))
+    w = logits * dexp
+    norm = jnp.maximum(jnp.abs(w.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))  # (B,t,H)
+    h = jnp.einsum("btsh,bshe->bthe", w.astype(v.dtype), v) / jnp.maximum(
+        norm[..., None], 1e-6
+    ).astype(v.dtype)
+
+    h = h.reshape(B, S, di)
+    h = rms_norm(h, params["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    # final recurrent state (for handing train -> decode; cheap recompute)
+    return h @ params["out_proj"], None
+
+
+def mlstm_decode(params, cfg, x, cache, pos=None):
+    """cache: {'C': (B,H,dh,dh) f32, 'n': (B,H,dh) f32, 'm': (B,H) f32}."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    di = cfg.d_inner
+    dh = di // H
+    q, k, v, i_pre, f_pre, z, new_conv = _mlstm_qkv_gates(
+        params, cfg, x, conv_state=cache["conv"]
+    )
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B, H, dh)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]  # (B, H)
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_prev, C_prev, n_prev = cache["m"], cache["C"], cache["n"]
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    alpha = jnp.exp(logf + m_prev - m_new)[..., None]
+    beta = jnp.exp(i_pre - m_new)[..., None]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    C = alpha[..., None] * C_prev + beta[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = alpha * n_prev + beta * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new)
+    )[..., None]
+    h = (num / jnp.maximum(den, 1e-6)).astype(x.dtype).reshape(B, 1, di)
+    h = rms_norm(h, params["norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(z)
+    return h @ params["out_proj"], {"C": C, "n": n, "m": m_new, "conv": new_conv}
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    H = cfg.n_heads
+    dh = cfg.d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": _init(ks[0], (d, 4 * d), dtype=dtype),  # z, i, f, o
+        "r": _init(ks[1], (4, H, dh, dh), scale=0.3, dtype=jnp.float32),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * d,)), jnp.full((d,), 3.0), jnp.zeros((d,))]
+        ).astype(jnp.float32),
+        "norm": jnp.ones((d,), dtype),
+        "out_proj": _init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def _slstm_step(params, cfg, wx_t, state):
+    """wx_t: (B, 4d) f32; state: (h, c, n, m) each (B, H, dh) f32."""
+    B = wx_t.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    h, c, n, m = state
+    rec = jnp.einsum("bhd,ghde->gbhe", h, params["r"])  # (4, B, H, dh)
+    pre = wx_t.reshape(B, 4, H, dh).transpose(1, 0, 2, 3) + rec
+    z_pre, i_pre, f_pre, o_pre = pre[0], pre[1], pre[2], pre[3]
+
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_forward(params, cfg, x, positions=None):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    wx = (x.astype(jnp.float32) @ params["w_in"].astype(jnp.float32)) + params["b"]
+
+    def body(state, wx_t):
+        new = _slstm_step(params, cfg, wx_t, state)
+        return new, new[0]
+
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    state0 = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(body, state0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, params["norm"], cfg.norm_eps)
+    return h @ params["out_proj"], None
+
+
+def slstm_decode(params, cfg, x, cache, pos=None):
+    B = x.shape[0]
+    d = cfg.d_model
+    wx = (x[:, 0].astype(jnp.float32) @ params["w_in"].astype(jnp.float32)) + params["b"]
+    state = (cache["h"], cache["c"], cache["n"], cache["m"])
+    h, c, n, m = _slstm_step(params, cfg, wx, state)
+    out = h.reshape(B, 1, d).astype(x.dtype)
+    out = rms_norm(out, params["norm"], cfg.norm_eps)
+    return out @ params["out_proj"], {"h": h, "c": c, "n": n, "m": m}
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}

@@ -1,0 +1,92 @@
+"""Serving engine: batched single-token decode against preallocated caches.
+
+``make_serve_step`` is what the dry-run lowers for the ``decode_*`` /
+``long_*`` shapes; :class:`ServeEngine` is the host-level request loop
+used by the examples (continuous batching over a fixed slot pool).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step, init_cache, prefill
+
+
+def make_serve_step(cfg):
+    """serve_step(params, cache, tokens (B,1), pos (B,)) -> (logits, cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Slot-based continuous batching: up to ``n_slots`` concurrent
+    sequences share one cache; finished slots are refilled from the queue."""
+
+    def __init__(self, cfg, params, n_slots: int = 4, s_max: int = 256):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.s_max = n_slots, s_max
+        self.cache = init_cache(cfg, n_slots, s_max)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.cur = np.zeros(n_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self._step = jax.jit(
+            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
+        )
+
+    def _admit(self, req: Request, slot: int) -> None:
+        # prefill the slot: simple per-token decode warmup (small prompts)
+        B = self.n_slots
+        toks = jnp.asarray(req.prompt)[None]
+        for t in range(len(req.prompt)):
+            tok_b = jnp.zeros((B, 1), jnp.int32).at[slot, 0].set(int(req.prompt[t]))
+            pos_b = jnp.asarray(self.pos)
+            logits, self.cache = self._step(self.params, self.cache, tok_b, pos_b)
+            self.pos[slot] += 1
+        self.cur[slot] = int(jnp.argmax(logits[slot, 0]))
+        self.slot_req[slot] = req
+
+    def run(self, requests: list[Request], max_steps: int = 10_000) -> list[Request]:
+        queue = list(requests)
+        done: list[Request] = []
+        steps = 0
+        while (queue or any(self.slot_req)) and steps < max_steps:
+            # fill free slots
+            for s in range(self.n_slots):
+                if self.slot_req[s] is None and queue:
+                    self.pos[s] = 0
+                    self._admit(queue.pop(0), s)
+            # one batched decode step for all active slots
+            toks = jnp.asarray(self.cur, jnp.int32)[:, None]
+            logits, self.cache = self._step(
+                self.params, self.cache, toks, jnp.asarray(self.pos)
+            )
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+            for s in range(self.n_slots):
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                req.out.append(int(self.cur[s]))
+                self.pos[s] += 1
+                self.cur[s] = nxt[s]
+                if len(req.out) >= req.max_new or self.pos[s] >= self.s_max - 1:
+                    req.done = True
+                    done.append(req)
+                    self.slot_req[s] = None
+            steps += 1
+        return done

@@ -1,0 +1,14 @@
+from repro.train.checkpoint import latest_step, restore, save
+from repro.train.loop import make_train_step, train_loop
+from repro.train.optim import adamw_init, adamw_update, cosine_lr
+
+__all__ = [
+    "make_train_step",
+    "train_loop",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "save",
+    "restore",
+    "latest_step",
+]

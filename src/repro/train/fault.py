@@ -1,0 +1,94 @@
+"""Fault tolerance and straggler mitigation (host-control-plane layer).
+
+At thousand-node scale the failure model is: nodes die mid-step, restart
+with a fresh process, and must rejoin deterministically.  The pieces here
+are deliberately framework-level (they do not depend on jax internals):
+
+  * deterministic data order — every batch is a pure function of
+    (seed, step), so any restart replays identically (exactly-once
+    training semantics given checkpoint step),
+  * checkpoint/restart — atomic checkpoints via ``train.checkpoint``;
+    ``resume`` picks the newest complete step and rebuilds state on the
+    *current* mesh (elastic re-meshing),
+  * straggler mitigation — the skim/data pipeline is basket-granular, so
+    slow shards shed baskets to fast ones (work stealing) based on
+    observed per-shard service times; the model-step itself is SPMD
+    (synchronous), so stragglers are attacked where slack exists: input
+    pipeline and checkpoint I/O.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+@dataclass
+class ShardHealth:
+    """Tracks per-data-shard service times; drives work stealing."""
+
+    n_shards: int
+    ema: np.ndarray = field(default=None)
+    alpha: float = 0.3
+
+    def __post_init__(self):
+        if self.ema is None:
+            self.ema = np.ones(self.n_shards, dtype=np.float64)
+
+    def observe(self, shard: int, seconds: float) -> None:
+        self.ema[shard] = (1 - self.alpha) * self.ema[shard] + self.alpha * seconds
+
+    def is_straggler(self, shard: int, factor: float = 2.0) -> bool:
+        return self.ema[shard] > factor * np.median(self.ema)
+
+
+def rebalance(assignments: dict[int, list], health: ShardHealth,
+              factor: float = 2.0) -> dict[int, list]:
+    """Move work items (baskets) from straggler shards to the fastest ones.
+
+    ``assignments``: shard -> list of work items.  Returns a new mapping;
+    steals half of each straggler's queue, round-robin to the fastest
+    non-straggler shards.
+    """
+    out = {k: list(v) for k, v in assignments.items()}
+    order = np.argsort(health.ema)  # fastest first
+    fast = [int(s) for s in order if not health.is_straggler(int(s), factor)]
+    if not fast:
+        return out
+    fi = 0
+    for s in range(health.n_shards):
+        if health.is_straggler(s, factor) and len(out.get(s, [])) > 1:
+            q = out[s]
+            steal, keep = q[len(q) // 2 :], q[: len(q) // 2]
+            out[s] = keep
+            for item in steal:
+                out[fast[fi % len(fast)]].append(item)
+                fi += 1
+    return out
+
+
+def resume(template, ckpt_dir: str, shardings=None):
+    """Restore the newest complete checkpoint; returns (tree, step) or
+    (template, 0) when starting fresh."""
+    step = ckpt.latest_step(ckpt_dir)
+    if step is None:
+        return template, 0
+    tree, meta = ckpt.restore(template, step, ckpt_dir, shardings=shardings)
+    return tree, int(meta["step"]) + 1
+
+
+class FailureInjector:
+    """Deterministic failure schedule for integration tests: raises at
+    configured steps, once each."""
+
+    def __init__(self, fail_at: list[int]):
+        self.fail_at = set(fail_at)
+        self.fired: set[int] = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise RuntimeError(f"injected node failure at step {step}")

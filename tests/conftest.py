@@ -1,0 +1,7 @@
+import os
+import sys
+
+# tests run single-device CPU; dry-run owns the 512-device flag
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,79 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.codecs import (
+    CODECS,
+    bitpack_decode,
+    bitpack_encode,
+    bitpack_raw_parts,
+    decode_basket,
+    encode_basket,
+)
+
+
+@pytest.mark.parametrize("codec", ["bitpack", "zlib", "raw"])
+@pytest.mark.parametrize(
+    "dtype,gen",
+    [
+        ("int32", lambda rng, n: rng.integers(-10_000, 10_000, n).astype(np.int32)),
+        ("float32", lambda rng, n: (rng.exponential(25, n) + 3).astype(np.float32)),
+        ("bool", lambda rng, n: rng.random(n) < 0.15),
+    ],
+)
+@pytest.mark.parametrize("n", [0, 1, 31, 32, 33, 1000, 4096])
+def test_roundtrip(codec, dtype, gen, n):
+    rng = np.random.default_rng(42 + n)
+    arr = gen(rng, n)
+    blob = encode_basket(arr, codec)
+    out = decode_basket(blob, codec, arr.dtype)
+    assert out.dtype == arr.dtype
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_bitpack_compresses_monotone_ints():
+    arr = np.cumsum(np.random.default_rng(0).integers(0, 8, 50_000)).astype(np.int32)
+    blob = bitpack_encode(arr)
+    assert len(blob) < arr.nbytes / 5  # small deltas pack tightly
+
+
+def test_bitpack_bool_ratio():
+    arr = np.zeros(10_000, dtype=bool)
+    blob = bitpack_encode(arr)
+    assert len(blob) < 2000
+
+
+def test_raw_parts_consistent():
+    arr = np.arange(-500, 500, dtype=np.int32)
+    parts = bitpack_raw_parts(bitpack_encode(arr))
+    assert parts["n"] == 1000
+    assert parts["kind"] == 0
+    assert parts["planes"].size == max(parts["bits"], 1) * parts["n_pad"] // 32
+
+
+@given(
+    st.lists(st.integers(min_value=-(2**30), max_value=2**30), max_size=200),
+)
+@settings(max_examples=50, deadline=None)
+def test_bitpack_int_property(xs):
+    arr = np.array(xs, dtype=np.int32)
+    out = bitpack_decode(bitpack_encode(arr), np.int32)
+    np.testing.assert_array_equal(out, arr)
+
+
+@given(
+    st.lists(
+        st.floats(allow_nan=False, allow_infinity=False, width=32),
+        max_size=200,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_bitpack_float_property(xs):
+    arr = np.array(xs, dtype=np.float32)
+    out = bitpack_decode(bitpack_encode(arr), np.float32)
+    np.testing.assert_array_equal(out, arr)  # bit-exact (xor transform)
+
+
+def test_all_codecs_registered():
+    assert set(CODECS) == {"bitpack", "zlib", "raw"}

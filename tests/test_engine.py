@@ -1,0 +1,118 @@
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    LAN_100G,
+    WAN_1G,
+    NetworkModel,
+    SkimEngine,
+    run_skim,
+)
+from repro.data.synth import make_nanoaod_like
+from tests.test_query import QUERY
+
+MODES = ["client_plain", "client_opt", "server_side", "near_data"]
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_nanoaod_like(12_000, n_hlt=16, n_filler=8, basket_events=2048)
+
+
+@pytest.fixture(scope="module")
+def results(store):
+    return {m: run_skim(store, QUERY, mode=m) for m in MODES}
+
+
+def test_all_modes_agree_on_selection(results):
+    counts = {m: r.n_passed for m, r in results.items()}
+    assert len(set(counts.values())) == 1, counts
+    ref = results["client_plain"].output.read_flat("event")
+    for m in MODES[1:]:
+        np.testing.assert_array_equal(
+            results[m].output.read_flat("event"), ref
+        )
+
+
+def test_outputs_identical_jagged(results):
+    v0, c0 = results["client_plain"].output.read_jagged("Electron_pt")
+    for m in MODES[1:]:
+        v, c = results[m].output.read_jagged("Electron_pt")
+        np.testing.assert_array_equal(c, c0)
+        np.testing.assert_allclose(v, v0)
+
+
+def test_two_phase_reduces_deserialize(results):
+    """Paper Fig. 4b: Client Opt's gain is deserialize (240.4s -> 16.8s);
+    basket fetch stays — every basket holding >=1 survivor still moves."""
+    b_plain = results["client_plain"].breakdown
+    b_opt = results["client_opt"].breakdown
+    assert b_opt.deserialize < 0.2 * b_plain.deserialize
+
+
+def test_two_phase_skips_empty_baskets(store):
+    """With a selective-enough cut, whole baskets have no survivors and
+    their output-only branches never move (byte savings appear)."""
+    harsh = {
+        "branches": ["Electron_*", "Jet_*", "Filler_*", "MET_*"],
+        "selection": {
+            "preselection": [{"branch": "MET_pt", "op": ">", "value": 250.0}]
+        },
+    }
+    plain = run_skim(store, harsh, mode="client_plain")
+    opt = run_skim(store, harsh, mode="client_opt")
+    assert 0 < opt.n_passed == plain.n_passed
+    assert opt.stats.bytes_fetched < 0.8 * plain.stats.bytes_fetched
+
+
+def test_near_data_fastest(results):
+    totals = {m: r.breakdown.total() for m, r in results.items()}
+    assert totals["near_data"] < totals["client_opt"]
+    assert totals["near_data"] < totals["client_plain"]
+    assert totals["near_data"] < totals["server_side"]
+
+
+def test_client_plain_deserialize_dominated(results):
+    b = results["client_plain"].breakdown
+    assert b.deserialize > b.filter  # row materialization dominates
+
+
+def test_server_side_pays_per_basket_requests(results):
+    # no TTreeCache locally -> requests scale with basket count
+    assert results["server_side"].stats.requests > results["near_data"].stats.requests
+
+
+def test_output_transfer_only_for_remote_filtering(results):
+    assert results["client_plain"].breakdown.output_transfer == 0
+    assert results["near_data"].breakdown.output_transfer > 0
+
+
+def test_bandwidth_sensitivity(store):
+    slow = SkimEngine(store, input_link=WAN_1G).run(QUERY, "client_opt")
+    fast = SkimEngine(store, input_link=LAN_100G).run(QUERY, "client_opt")
+    assert fast.breakdown.fetch < slow.breakdown.fetch
+    assert slow.n_passed == fast.n_passed
+
+
+def test_near_data_insensitive_to_client_link(store):
+    # filtering happens at storage; only the small output crosses the WAN
+    slow = SkimEngine(
+        store, input_link=NetworkModel(0.1, rtt_s=0.05), output_link=NetworkModel(0.1)
+    ).run(QUERY, "near_data")
+    # input fetch stays on the PCIe-class link regardless of client tier
+    assert slow.breakdown.fetch < 0.1
+
+
+def test_selectivity_sane(results):
+    sel = results["near_data"].selectivity
+    assert 0.0 < sel < 0.2  # physics skims cut by orders of magnitude
+
+
+def test_empty_selection_ok(store):
+    q = dict(QUERY)
+    q["selection"] = {
+        "preselection": [{"branch": "MET_pt", "op": ">", "value": 1e9}]
+    }
+    r = run_skim(store, q, mode="near_data")
+    assert r.n_passed == 0
+    assert r.output.n_events == 0

@@ -1,0 +1,99 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.distributed.compression import (
+    dequantize_int8,
+    ef_quantize,
+    ef_quantize_tree,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.train.fault import FailureInjector, ShardHealth, rebalance
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, (64, 64)), jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_accumulates():
+    """EF: the sum of quantized estimates converges to the true sum."""
+    rng = np.random.default_rng(1)
+    g_true = jnp.asarray(rng.normal(0, 1, (256,)), jnp.float32)
+    err = jnp.zeros_like(g_true)
+    total = jnp.zeros_like(g_true)
+    for _ in range(50):
+        g_hat, err = ef_quantize(g_true, err)
+        total = total + g_hat
+    np.testing.assert_allclose(
+        np.asarray(total) / 50, np.asarray(g_true), atol=0.02
+    )
+
+
+def test_ef_tree_api():
+    grads = {"a": jnp.ones((8,)), "b": {"c": jnp.full((4,), -2.0)}}
+    g_hat, errs = ef_quantize_tree(grads)
+    assert jax.tree.structure(g_hat) == jax.tree.structure(grads)
+    for g, gh in zip(jax.tree.leaves(grads), jax.tree.leaves(g_hat)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gh), atol=0.05)
+
+
+@given(st.integers(0, 10_000), st.floats(0.01, 0.5))
+@settings(max_examples=20, deadline=None)
+def test_topk_property(seed, frac):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(40, 25)), jnp.float32)
+    s = np.asarray(topk_sparsify(g, frac))
+    nnz = (s != 0).sum()
+    assert nnz <= int(g.size * frac) + 25  # ties may keep a few extra
+    # kept entries are the largest-magnitude ones
+    if nnz:
+        assert np.abs(s[s != 0]).min() >= np.abs(np.asarray(g)[s == 0]).max() - 1e-6
+
+
+def test_shard_health_straggler_detection():
+    h = ShardHealth(8)
+    for _ in range(10):
+        for s in range(8):
+            h.observe(s, 5.0 if s == 3 else 1.0)
+    assert h.is_straggler(3)
+    assert not h.is_straggler(0)
+
+
+def test_rebalance_steals_from_straggler():
+    h = ShardHealth(4)
+    for _ in range(10):
+        for s in range(4):
+            h.observe(s, 10.0 if s == 0 else 1.0)
+    assignments = {0: list(range(8)), 1: [], 2: [], 3: []}
+    out = rebalance(assignments, h)
+    assert len(out[0]) == 4  # half stolen
+    assert sum(len(v) for v in out.values()) == 8  # nothing lost
+    assert all(len(out[s]) > 0 for s in (1, 2, 3))
+
+
+def test_failure_injector_fires_once():
+    inj = FailureInjector([3])
+    inj.maybe_fail(2)
+    with pytest.raises(RuntimeError):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)  # second pass: already fired
+
+
+def test_compressed_psum_single_device():
+    """On a 1-device mesh the compressed reduce must be ~identity."""
+    from repro.distributed.compression import compressed_psum
+
+    mesh = jax.make_mesh((1,), ("pod",))
+    fn = compressed_psum(mesh, "pod")
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 2, (32, 32)), jnp.float32)
+    with mesh:
+        y = fn(x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=0.05)

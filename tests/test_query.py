@@ -1,0 +1,137 @@
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core.branchmap import expand_branches, register_minimal_set
+from repro.core.planner import plan_skim
+from repro.core.query import Cut, eval_node, eval_stage, parse_query
+from repro.data.synth import make_nanoaod_like
+
+QUERY = {
+    "input": "in.skim",
+    "output": "out.skim",
+    "branches": [
+        "Electron_*", "Muon_*", "Jet_*", "MET_*", "HLT_*", "Filler_*",
+        "PV_npvs", "run", "event", "luminosityBlock",
+    ],
+    "selection": {
+        "preselection": [{"branch": "nElectron", "op": ">=", "value": 1}],
+        "object": [
+            {
+                "collection": "Electron",
+                "cuts": [
+                    {"var": "pt", "op": ">", "value": 20.0},
+                    {"var": "eta", "op": "abs<", "value": 2.4},
+                ],
+                "min_count": 1,
+            }
+        ],
+        "event": [
+            {
+                "type": "ht",
+                "collection": "Jet",
+                "var": "pt",
+                "object_cuts": [{"var": "pt", "op": ">", "value": 30.0}],
+                "op": ">",
+                "value": 100.0,
+            },
+            {"type": "any", "branches": ["HLT_IsoMu24"]},
+            {"type": "cut", "branch": "MET_pt", "op": ">", "value": 20.0},
+        ],
+    },
+}
+
+
+def test_parse_structure():
+    q = parse_query(QUERY)
+    assert len(q.preselection) == 1
+    assert len(q.object_stage) == 1
+    assert len(q.event_stage) == 3
+    fb = q.filter_branches()
+    assert "Electron_pt" in fb and "nElectron" in fb and "MET_pt" in fb
+    assert "Jet_pt" in fb and "HLT_IsoMu24" in fb
+
+
+def test_eval_cut_matches_numpy():
+    data = {"MET_pt": np.array([10.0, 25.0, 50.0])}
+    mask = eval_node(Cut("MET_pt", ">", 20.0), data)
+    np.testing.assert_array_equal(mask, [False, True, True])
+
+
+def test_object_selection_jagged():
+    q = parse_query(QUERY)
+    # 3 events: [no electrons], [1 passing], [2, one fails eta]
+    data = {
+        "nElectron": np.array([0, 1, 2]),
+        "Electron_pt": np.array([25.0, 30.0, 40.0]),
+        "Electron_eta": np.array([1.0, 3.0, -1.0]),
+    }
+    mask = eval_node(q.object_stage[0], data)
+    np.testing.assert_array_equal(mask, [False, True, True])
+
+
+def test_ht_cut():
+    q = parse_query(QUERY)
+    ht_node = q.event_stage[0]
+    data = {
+        "nJet": np.array([2, 1]),
+        "Jet_pt": np.array([80.0, 50.0, 90.0]),
+    }
+    # event0: 80+50=130 > 100 True; event1: 90 < 100 False
+    np.testing.assert_array_equal(eval_node(ht_node, data), [True, False])
+
+
+def test_stage_and_semantics():
+    q = parse_query(QUERY)
+    data = {
+        "MET_pt": np.array([30.0, 30.0]),
+        "HLT_IsoMu24": np.array([True, False]),
+        "nJet": np.array([1, 1]),
+        "Jet_pt": np.array([200.0, 200.0]),
+    }
+    mask = eval_stage(q.event_stage, data, 2)
+    np.testing.assert_array_equal(mask, [True, False])
+
+
+def test_branchmap_minimal_set(caplog):
+    avail = [f"HLT_path{i:03d}" for i in range(20)] + ["HLT_IsoMu24", "MET_pt"]
+    with caplog.at_level(logging.WARNING, logger="repro.branchmap"):
+        sel, excl = expand_branches(["HLT_*", "MET_pt"], avail)
+    assert sel == ["HLT_IsoMu24", "MET_pt"]
+    assert len(excl) == 20
+    assert any("excluded by optimization" in r.message for r in caplog.records)
+
+
+def test_branchmap_force_all():
+    avail = [f"HLT_path{i:03d}" for i in range(20)] + ["HLT_IsoMu24"]
+    sel, excl = expand_branches(["HLT_*"], avail, force_all=True)
+    assert len(sel) == 21 and not excl
+
+
+def test_register_minimal_set():
+    register_minimal_set("Trig_*", ("Trig_A",))
+    sel, excl = expand_branches(["Trig_*"], ["Trig_A", "Trig_B"])
+    assert sel == ["Trig_A"] and excl == ["Trig_B"]
+
+
+def test_plan_two_phase_split():
+    store = make_nanoaod_like(2000, n_hlt=16, n_filler=4)
+    q = parse_query(QUERY)
+    plan = plan_skim(q, store)
+    # filter branches are the paper's O(10) set
+    assert 5 <= len(plan.filter_branches) <= 15
+    # output includes Electron_* group + counts + filter extras
+    assert "Electron_phi" in plan.output_branches
+    assert set(plan.output_only_branches).isdisjoint(plan.filter_branches)
+    assert plan.excluded_by_optimization  # HLT_* was reduced
+
+
+def test_unknown_branch_raises():
+    store = make_nanoaod_like(100, n_hlt=4)
+    bad = dict(QUERY)
+    bad["selection"] = {
+        "preselection": [{"branch": "NoSuchBranch", "op": ">", "value": 0}]
+    }
+    with pytest.raises(KeyError):
+        plan_skim(parse_query(bad), store)

@@ -1,0 +1,68 @@
+import numpy as np
+import pytest
+
+from repro.data.store import EventStore, FetchStats
+from repro.data.synth import make_nanoaod_like
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_nanoaod_like(10_000, n_hlt=8, n_filler=2, basket_events=1024)
+
+
+def test_structure(store):
+    assert store.n_events == 10_000
+    assert "Electron_pt" in store.branches
+    assert store.branches["Electron_pt"].jagged
+    assert store.branches["Electron_pt"].counts_branch == "nElectron"
+    assert store.n_baskets("MET_pt") == 10  # 10k / 1024 -> 10 baskets
+
+
+def test_first_event_index(store):
+    fei = store.first_event_index("MET_pt")
+    np.testing.assert_array_equal(fei, np.arange(10) * 1024)
+
+
+def test_basket_range_selection(store):
+    ids = store.basket_ids_for_range("MET_pt", 1500, 2100)
+    assert ids == [1, 2]  # events 1024..2047 and 2048..3071
+
+
+def test_flat_range_read(store):
+    full = store.read_flat("MET_pt")
+    part = store.read_flat("MET_pt", 1500, 2100)
+    np.testing.assert_array_equal(part, full[1500:2100])
+
+
+def test_jagged_range_read(store):
+    v_full, c_full = store.read_jagged("Jet_pt")
+    v, c = store.read_jagged("Jet_pt", 3000, 4000)
+    np.testing.assert_array_equal(c, c_full[3000:4000])
+    off = int(c_full[:3000].sum())
+    np.testing.assert_array_equal(v, v_full[off : off + int(c.sum())])
+
+
+def test_fetch_stats_accounting(store):
+    stats = FetchStats()
+    blobs = store.fetch_range("MET_pt", 0, 2048, stats=stats)
+    assert stats.bytes_fetched == sum(len(b) for _, b in blobs)
+    assert stats.requests == 1  # coalesced
+    stats2 = FetchStats()
+    store.fetch_range("MET_pt", 0, 2048, stats=stats2, coalesce=False)
+    assert stats2.requests == 2  # per-basket
+
+
+def test_save_load_roundtrip(tmp_path, store):
+    p = str(tmp_path / "x.skim")
+    store.save(p)
+    st2 = EventStore.load(p)
+    assert st2.n_events == store.n_events
+    np.testing.assert_array_equal(st2.read_flat("MET_pt"), store.read_flat("MET_pt"))
+    v1, c1 = store.read_jagged("Electron_pt")
+    v2, c2 = st2.read_jagged("Electron_pt")
+    np.testing.assert_array_equal(v1, v2)
+    np.testing.assert_array_equal(c1, c2)
+
+
+def test_compressed_smaller_than_raw(store):
+    assert store.compressed_bytes() < store.raw_bytes()
