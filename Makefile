@@ -1,0 +1,19 @@
+# Convenience targets (see README.md).  Everything runs from source via
+# PYTHONPATH=src; no install step.
+
+PY ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test bench lint quickstart
+
+test:  ## tier-1 suite
+	$(PY) -m pytest -x -q
+
+bench:  ## full benchmark harness (CSV on stdout)
+	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
+	ruff check src tests benchmarks examples
+
+quickstart:
+	$(PY) examples/quickstart.py

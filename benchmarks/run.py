@@ -4,7 +4,10 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
 
   Fig 4a -> bench_latency      Fig 4b -> bench_breakdown
   Fig 5a -> bench_nearstorage  Fig 5b -> bench_utilization
-  (ours)  -> bench_kernels, roofline (from dry-run artifacts)
+  (ours)  -> bench_kernels, roofline (from dry-run artifacts),
+             bench_pipeline (serial vs pipelined vs fused-pipelined
+             near-data executor: window prefetch overlap + the fused
+             predicate/compact device pass), bench_scaling (multi-shard)
 """
 
 from __future__ import annotations
@@ -19,6 +22,7 @@ def main() -> None:
         bench_kernels,
         bench_latency,
         bench_nearstorage,
+        bench_pipeline,
         bench_scaling,
         bench_utilization,
         roofline,
@@ -32,6 +36,7 @@ def main() -> None:
         (bench_nearstorage, "Fig5a near-storage"),
         (bench_utilization, "Fig5b utilization"),
         (bench_kernels, "kernel micro"),
+        (bench_pipeline, "pipelined/fused executor"),
         (bench_scaling, "beyond-paper scaling/overlap"),
     ]:
         print(f"# --- {label} ---", file=sys.stderr)

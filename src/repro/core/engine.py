@@ -16,6 +16,18 @@ Modes (Fig. 4/5 of the paper):
     (DPU analogue), coalesced high-bandwidth fetches, hardware-class
     (vectorized bitplane) decode, survivor-only output over the WAN.
 
+``near_data`` additionally runs the **pipelined fused executor** by
+default (DESIGN.md §4): the coalesced fetch + decode of basket window
+*i+1* overlaps filtering of window *i* (double-buffered; modeled from
+exact per-window records by default, realized by the
+:class:`repro.data.store.WindowPrefetcher` worker thread with
+``pipeline="threads"``), and phase 1 evaluates the query as a compiled
+predicate program fused with stream compaction — the Pallas VMEM kernel
+``repro.kernels.skim_fused`` on TPU, the jagged-layout program
+interpreter on plain CPUs.  ``fused=False`` / ``pipeline=False`` select
+the reference two-pass serial path; all paths produce bit-identical
+survivor sets and outputs.
+
 Compute stages (decompress / deserialize / filter / write) are *measured*
 on this host; link stages are *modeled* from accounted bytes via
 :class:`NetworkModel` — the container has no real 1/10/100 Gb/s WAN, so the
@@ -31,7 +43,7 @@ import numpy as np
 
 from repro.core.planner import SkimPlan, plan_skim
 from repro.core.query import Query, eval_stage, parse_query
-from repro.data.store import EventStore, FetchStats
+from repro.data.store import EventStore, FetchStats, WindowPrefetcher
 
 
 @dataclass
@@ -45,10 +57,7 @@ class NetworkModel:
         return nbytes * 8.0 / (self.bandwidth_gbps * 1e9) + n_requests * self.rtt_s
 
 
-# Paper §4: "A 100 MB TTreeCache is used in all methods".
-TTREECACHE_BYTES = 100 * 1024 * 1024
-
-# Link tiers used throughout the evaluation (paper §4).
+# Link tiers used throughout the evaluation (paper §4; DESIGN.md §2c).
 WAN_1G = NetworkModel(1.0, rtt_s=0.010)
 LAN_10G = NetworkModel(10.0, rtt_s=0.001)
 LAN_100G = NetworkModel(100.0, rtt_s=0.0005)
@@ -87,6 +96,15 @@ class Breakdown:
             "output_transfer": self.output_transfer,
             "total": self.total(),
         }
+
+    def merge(self, other: "Breakdown") -> None:
+        """Accumulate another breakdown (per-window accounting merge)."""
+        self.fetch += other.fetch
+        self.decompress += other.decompress
+        self.deserialize += other.deserialize
+        self.filter += other.filter
+        self.write += other.write
+        self.output_transfer += other.output_transfer
 
 
 @dataclass
@@ -134,11 +152,13 @@ def _decode_branches(
     counts branches already decoded in an earlier stage.
     """
     data: dict[str, np.ndarray] = dict(preloaded or {})
-    local = FetchStats()
     # counts branches must decode before jagged values they describe
     order = sorted(names, key=lambda n: 0 if not store.branches[n].jagged else 1)
+    # one coalesced read round for the whole branch set (TTreeCache model;
+    # the store owns the request accounting — DESIGN.md §2b)
+    window = store.fetch_window(order, start, stop, stats=stats, coalesce=coalesce)
     for name in order:
-        blobs = store.fetch_range(name, start, stop, stats=local, coalesce=coalesce)
+        blobs = window[name]
         parts = []
         with _Timer(breakdown, "decompress"):
             decoded = [store.decode_blob(name, blob) for _, blob in blobs]
@@ -168,23 +188,84 @@ def _decode_branches(
                 if parts
                 else np.empty(0, dtype=store.branches[name].np_dtype())
             )
-    if coalesce:
-        # TTreeCache model (paper §4: "a 100 MB TTreeCache is used in all
-        # methods"): all baskets needed by this read round are aggregated
-        # into bulk requests of up to the cache window.
-        n_req = (
-            max(1, -(-local.bytes_fetched // TTREECACHE_BYTES))
-            if local.bytes_fetched
-            else 0
-        )
-        stats.bytes_fetched += local.bytes_fetched
-        stats.requests += n_req
-        for k, v in local.by_branch.items():
-            stats.by_branch[k] = stats.by_branch.get(k, 0) + v
-    else:
-        # on-demand local reads: one request (seek) per basket
-        stats.merge(local)
     return data
+
+
+def _pipeline_schedule(
+    records: list[dict], link: NetworkModel, depth: int = 2
+) -> float:
+    """Exact event-driven schedule of the double-buffered executor.
+
+    One load worker (modeled link fetch + measured decode per window)
+    runs ahead of one process worker (measured filter + phase-2 fetch and
+    compute), with at most ``depth`` windows in flight — load of window
+    ``i`` cannot start before window ``i - depth`` finished processing.
+    Returns the makespan of the window loop; the serial equivalent is the
+    plain sum of all stage terms (DESIGN.md §4b).
+    """
+    load_free = 0.0  # when the load worker is next available
+    proc_free = 0.0  # when the process worker is next available
+    done: list[float] = []  # per-window processing completion times
+    for i, r in enumerate(records):
+        load_t = (
+            link.transfer_time(r["load_bytes"], r["load_requests"])
+            + r["load_compute"]
+        )
+        start = load_free if i < depth else max(load_free, done[i - depth])
+        load_done = start + load_t
+        proc_t = r.get("proc_compute", 0.0) + link.transfer_time(
+            r.get("p2_bytes", 0), r.get("p2_requests", 0)
+        )
+        proc_free = max(proc_free, load_done) + proc_t
+        done.append(proc_free)
+        load_free = load_done
+    return proc_free
+
+
+def _window_phase2(
+    store,
+    plan: SkimPlan,
+    start: int,
+    stop: int,
+    mask: np.ndarray,
+    dev_cols: dict,
+    loaded: dict,
+    breakdown: Breakdown,
+    stats: FetchStats,
+    coalesce: bool,
+) -> tuple[dict, dict]:
+    """Phase 2 for one surviving window: fetch the output-only branches and
+    select survivor columns (shared by the single-query executor and the
+    shared-scan service — the two must stay bit-identical)."""
+    need2 = [x for x in plan.output_only_branches if x not in loaded]
+    data2 = _decode_branches(
+        store, need2, start, stop, breakdown, stats, coalesce, preloaded=loaded
+    )
+    full = {**loaded, **data2}
+    with _Timer(breakdown, "deserialize"):
+        cols, jagged = _select_columns(
+            {k2: full[k2] for k2 in plan.output_branches if k2 not in dev_cols},
+            mask,
+            store,
+        )
+        # payload columns come straight off the fused kernel, already
+        # survivor-compacted (bit-identical to arr[mask])
+        cols.update(dev_cols)
+    return cols, jagged
+
+
+def _concat_output(out_cols: dict, n_passed: int, plan: SkimPlan, store) -> dict:
+    """Concatenate per-window survivor columns (empty-output dtype fallback
+    included)."""
+    if n_passed:
+        return {
+            k2: np.concatenate(v) if v else np.empty(0)
+            for k2, v in out_cols.items()
+        }
+    return {
+        k2: np.empty(0, dtype=store.branches[k2].np_dtype())
+        for k2 in plan.output_branches
+    }
 
 
 def _rows_materialize(data: dict[str, np.ndarray], store, n: int) -> list:
@@ -244,7 +325,28 @@ def _write_output(
 
 class SkimEngine:
     """Runs a :class:`Query` against an :class:`EventStore` in one of the
-    paper's four execution modes."""
+    paper's four execution modes.
+
+    ``fused`` / ``pipeline`` control the ``near_data`` executor only (the
+    DPU analogue is where the fast path lives): ``fused=True`` evaluates
+    the compiled predicate + stream compaction as one pass per window on
+    the backend's best executor, and ``pipeline`` double-buffers window
+    fetch+decode behind filtering — ``True`` runs the serial schedule and
+    computes the exact double-buffered makespan from per-window records
+    (``extras["pipeline_total"]``; compute stages stay cleanly
+    measurable), ``"threads"`` additionally runs the real
+    :class:`~repro.data.store.WindowPrefetcher` worker (wall-clock
+    overlap on hosts with spare cores; stage timings then include
+    contention).  The other three modes always run the reference serial
+    paths so the paper comparison stays honest.
+
+    Note: any fused or pipelined configuration preloads *all* filter
+    branches per window (one coalesced TTreeCache round), trading the
+    staged evaluator's early-discard byte savings for batched I/O — so
+    byte accounting differs slightly from the lazy staged path when
+    whole windows die at an early stage.  The seed-exact reference for
+    accounting comparisons is ``fused=False, pipeline=False``.
+    """
 
     def __init__(
         self,
@@ -253,6 +355,9 @@ class SkimEngine:
         output_link: NetworkModel | None = None,
         chunk_events: int | None = None,
         decode_fn=None,
+        fused: bool = True,
+        pipeline: bool | str = True,
+        near_input_link: NetworkModel = PCIE_128G,
     ):
         self.store = store
         self.input_link = input_link
@@ -260,10 +365,22 @@ class SkimEngine:
         self.chunk_events = chunk_events or store.basket_events
         # near-data mode may plug in the Pallas/vectorized decoder
         self.decode_fn = decode_fn
+        self.fused = fused
+        self.pipeline = pipeline
+        # what the DPU analogue reads its input baskets over: PCIe Gen3
+        # x16 by default, or an SSD-class tier (e.g. LOCAL_DISK) to model
+        # near-storage fetch that the prefetcher actually has to hide
+        self.near_input_link = near_input_link
 
     # -- public API ----------------------------------------------------------
 
-    def run(self, query: Query | dict | str, mode: str = "near_data") -> SkimResult:
+    def run(
+        self,
+        query: Query | dict | str,
+        mode: str = "near_data",
+        fused: bool | None = None,
+        pipeline: bool | str | None = None,
+    ) -> SkimResult:
         if not isinstance(query, Query):
             query = parse_query(query)
         plan = plan_skim(query, self.store)
@@ -274,7 +391,16 @@ class SkimEngine:
         if mode == "server_side":
             return self._run_two_phase(plan, mode, LOCAL_DISK, coalesce=False)
         if mode == "near_data":
-            return self._run_two_phase(plan, mode, PCIE_128G, coalesce=True)
+            prefetch = self.pipeline if pipeline is None else pipeline
+            if prefetch not in (False, True, "threads"):
+                raise ValueError(
+                    f"pipeline must be False, True, or 'threads', got {prefetch!r}"
+                )
+            return self._run_two_phase(
+                plan, mode, self.near_input_link, coalesce=True,
+                fused=self.fused if fused is None else fused,
+                prefetch=prefetch,
+            )
         raise ValueError(f"unknown mode {mode}")
 
     # -- legacy client-side (Fig. 2b) -----------------------------------------
@@ -310,7 +436,13 @@ class SkimEngine:
     # -- two-phase model (client_opt / server_side / near_data) ---------------
 
     def _run_two_phase(
-        self, plan: SkimPlan, mode: str, link: NetworkModel, coalesce: bool
+        self,
+        plan: SkimPlan,
+        mode: str,
+        link: NetworkModel,
+        coalesce: bool,
+        fused: bool = False,
+        prefetch: bool | str = False,
     ) -> SkimResult:
         store, b, stats = self.store, Breakdown(), FetchStats()
         n = store.n_events
@@ -321,67 +453,131 @@ class SkimEngine:
         n_passed = 0
         phase2_stats = FetchStats()
 
-        for start in range(0, n, chunk):
-            stop = min(start + chunk, n)
-            m = stop - start
-            # ---- phase 1: staged filter over filter-criteria branches ----
-            mask = np.ones(m, dtype=bool)
-            loaded: dict[str, np.ndarray] = {}
-            for stage_name, stage in plan.query.stages():
-                if not stage:
-                    continue
-                if not mask.any():
-                    break  # hierarchical early discard: skip later stages
-                need = [
-                    x
-                    for x in sorted(plan.query.stage_branches(stage_name))
-                    if x not in loaded and x in store.branches
-                ]
-                from repro.core.branchmap import with_counts_branches
+        program = plan.compiled_program() if fused else None
+        use_threads = prefetch == "threads"
+        preload = fused or bool(prefetch)
+        # per-window load/process records feeding the explicit pipeline
+        # schedule model (DESIGN.md §4b)
+        win_records: list[dict] = []
 
-                need = [
-                    x for x in with_counts_branches(need, store) if x not in loaded
-                ]
-                loaded.update(
-                    _decode_branches(
-                        store, need, start, stop, b, stats, coalesce, preloaded=loaded
+        def load_window(start: int, stop: int):
+            """Fetch + decode one window's filter branches (in "threads"
+            mode this runs in the prefetch worker; all accounting is
+            window-local and merged in window order by the consumer, so
+            pipelined byte/request stats are identical to the serial
+            schedule)."""
+            lb, ls = Breakdown(), FetchStats()
+            data = _decode_branches(
+                store, plan.filter_branches, start, stop, lb, ls, coalesce
+            )
+            return data, lb, ls
+
+        def windows():
+            if preload:
+                # all filter branches move in one coalesced round per
+                # window (the paper's TTreeCache batching); in "threads"
+                # mode the prefetcher decodes window i+1 while window i
+                # filters
+                src = WindowPrefetcher(n, chunk, load_window, enabled=use_threads)
+                for start, stop, (data, lb, ls) in src:
+                    b.merge(lb)
+                    stats.merge(ls)
+                    win_records.append(
+                        {
+                            "load_bytes": ls.bytes_fetched,
+                            "load_requests": ls.requests,
+                            "load_compute": lb.decompress + lb.deserialize,
+                        }
                     )
-                )
-                with _Timer(b, "filter"):
-                    mask &= eval_stage(stage, loaded, m)
+                    yield start, stop, data
+            else:
+                for start in range(0, n, chunk):
+                    yield start, min(start + chunk, n), None
+
+        t_phase = time.perf_counter()
+        pad_K = 0  # grows monotonically so padded shapes (and compiled
+        # kernels) stay stable across windows once the max multiplicity
+        # has been seen
+        for start, stop, preloaded in windows():
+            m = stop - start
+            dev_cols: dict[str, np.ndarray] = {}
+            # window-local processing breakdown/stats (merged into the
+            # run totals below; also feeds the pipeline schedule model)
+            wb, w2s = Breakdown(), FetchStats()
+            if fused:
+                # ---- phase 1 (fused path): one pass evaluates the
+                # compiled predicate AND compacts [index]+payload rows ----
+                from repro.core.neardata import fused_window_skim, window_pad_K
+
+                loaded = preloaded
+                if not plan.filter_branches:
+                    # selection-free skim (pure projection): every event
+                    # survives, nothing to evaluate
+                    mask = np.ones(m, dtype=bool)
+                else:
+                    pad_K = max(pad_K, window_pad_K(loaded, program, store))
+                    with _Timer(wb, "filter"):
+                        mask, dev_cols = fused_window_skim(
+                            loaded, program, store,
+                            payload_branches=plan.payload_branches,
+                            K=pad_K,
+                            pad_to=chunk,
+                        )
+            else:
+                # ---- phase 1: staged filter over filter-criteria branches ----
+                mask = np.ones(m, dtype=bool)
+                loaded = dict(preloaded) if preloaded is not None else {}
+                for stage_name, stage in plan.query.stages():
+                    if not stage:
+                        continue
+                    if not mask.any():
+                        break  # hierarchical early discard: skip later stages
+                    need = [
+                        x
+                        for x in sorted(plan.query.stage_branches(stage_name))
+                        if x not in loaded and x in store.branches
+                    ]
+                    from repro.core.branchmap import with_counts_branches
+
+                    need = [
+                        x for x in with_counts_branches(need, store) if x not in loaded
+                    ]
+                    loaded.update(
+                        _decode_branches(
+                            store, need, start, stop, wb, stats, coalesce,
+                            preloaded=loaded,
+                        )
+                    )
+                    with _Timer(wb, "filter"):
+                        mask &= eval_stage(stage, loaded, m)
 
             k = int(mask.sum())
-            if k == 0:
-                continue
-            n_passed += k
-
-            # ---- phase 2: output-only branches, survivors only ----
-            need2 = [x for x in plan.output_only_branches if x not in loaded]
-            data2 = _decode_branches(
-                store, need2, start, stop, b, phase2_stats, coalesce, preloaded=loaded
-            )
-            full = {**loaded, **data2}
-            with _Timer(b, "deserialize"):
-                cols, jagged = _select_columns(
-                    {k2: full[k2] for k2 in plan.output_branches}, mask, store
+            if k:
+                n_passed += k
+                # ---- phase 2: output-only branches, survivors only ----
+                cols, jagged = _window_phase2(
+                    store, plan, start, stop, mask, dev_cols, loaded, wb, w2s,
+                    coalesce,
                 )
-            jagged_map.update(jagged)
-            for k2, v in cols.items():
-                out_cols[k2].append(v)
+                jagged_map.update(jagged)
+                for k2, v in cols.items():
+                    out_cols[k2].append(v)
+            b.merge(wb)
+            phase2_stats.merge(w2s)
+            if win_records:
+                win_records[-1].update(
+                    {
+                        "proc_compute": wb.decompress + wb.deserialize + wb.filter,
+                        "p2_bytes": w2s.bytes_fetched,
+                        "p2_requests": w2s.requests,
+                    }
+                )
+        phase_wall = time.perf_counter() - t_phase
 
         stats.merge(phase2_stats)
 
         with _Timer(b, "write"):
-            if n_passed:
-                cat = {
-                    k2: np.concatenate(v) if v else np.empty(0)
-                    for k2, v in out_cols.items()
-                }
-            else:
-                cat = {
-                    k2: np.empty(0, dtype=store.branches[k2].np_dtype())
-                    for k2 in plan.output_branches
-                }
+            cat = _concat_output(out_cols, n_passed, plan, store)
         out = _write_output(cat, jagged_map, store, b)
 
         b.fetch = link.transfer_time(stats.bytes_fetched, stats.requests)
@@ -390,19 +586,34 @@ class SkimEngine:
             # the filtered file crosses the WAN back to the client
             b.output_transfer = self.output_link.transfer_time(out_bytes, 1)
         compute = b.decompress + b.deserialize + b.filter + b.write
-        # beyond-paper: double-buffered basket prefetch (the paper's
-        # "advanced data prefetching" future work) — with fetch of chunk
-        # i+1 overlapping compute of chunk i, the pipeline bound is
-        # max(fetch, compute) instead of their sum.
+        # double-buffered basket prefetch (the paper's "advanced data
+        # prefetching" future work, implemented for near_data): with fetch
+        # of window i+1 overlapping compute of window i, the pipeline
+        # bound is max(fetch, compute) instead of their sum.
         overlap_total = (
             max(b.fetch, b.decompress + b.deserialize + b.filter)
             + b.write
             + b.output_transfer
         )
+        extras = {
+            "output_bytes": out_bytes,
+            "overlap_total": overlap_total,
+            "fused": fused,
+            "pipelined": bool(prefetch),
+            "phase_wall_s": phase_wall,
+        }
+        if win_records:
+            # exact double-buffered schedule from the per-window records
+            # (what the threaded prefetcher realizes on capable hosts)
+            extras["pipeline_total"] = (
+                _pipeline_schedule(win_records, link)
+                + b.write
+                + b.output_transfer
+            )
         return SkimResult(
             mode, out, n, n_passed, b, stats, plan,
             busy_fraction=compute / max(b.total(), 1e-12),
-            extras={"output_bytes": out_bytes, "overlap_total": overlap_total},
+            extras=extras,
         )
 
 
@@ -412,5 +623,9 @@ def run_skim(
     mode: str = "near_data",
     input_link: NetworkModel = WAN_1G,
     output_link: NetworkModel | None = None,
+    fused: bool | None = None,
+    pipeline: bool | str | None = None,
 ) -> SkimResult:
-    return SkimEngine(store, input_link, output_link).run(query, mode)
+    return SkimEngine(store, input_link, output_link).run(
+        query, mode, fused=fused, pipeline=pipeline
+    )

@@ -36,23 +36,26 @@ class PaddedBatch:
     n_events: int
 
 
-def _padded_collection(values: np.ndarray, counts: np.ndarray, K: int):
-    """Jagged -> (E, K) dense + validity."""
-    E = len(counts)
-    out = np.zeros((E, K), dtype=np.float32)
-    validity = np.zeros((E, K), dtype=np.float32)
+def _scatter_jagged(out: np.ndarray, values: np.ndarray, counts: np.ndarray) -> None:
+    """Write jagged values into a preallocated (E, K) dense view (in place;
+    fully vectorized — this runs per window on the skim hot path)."""
+    E, K = out.shape
+    take = np.minimum(counts, K).astype(np.int64)
+    if not (E and take.sum()):
+        return
     offsets = np.concatenate([[0], np.cumsum(counts)])
-    cols = np.arange(K)
-    take = np.minimum(counts[:, None], K)
-    validity[cols[None, :] < take] = 1.0
-    # scatter values row-wise
-    idx_event = np.repeat(np.arange(E), np.minimum(counts, K))
-    idx_slot = np.concatenate([np.arange(min(c, K)) for c in counts]) if E else np.empty(0, int)
-    src = np.concatenate(
-        [values[offsets[i] : offsets[i] + min(counts[i], K)] for i in range(E)]
-    ) if E else np.empty(0, values.dtype)
-    out[idx_event, idx_slot] = src.astype(np.float32)
-    return out, validity
+    idx_event = np.repeat(np.arange(E), take)
+    # slot index within each event: global ramp minus each event's base
+    bases = np.concatenate([[0], np.cumsum(take)])[:-1]
+    idx_slot = np.arange(take.sum()) - np.repeat(bases, take)
+    src_idx = np.repeat(offsets[:-1], take) + idx_slot
+    out[idx_event, idx_slot] = values[src_idx].astype(np.float32)
+
+
+def _collection_validity(counts: np.ndarray, K: int) -> np.ndarray:
+    """(E, K) validity: slot k live iff k < counts[e]."""
+    take = np.minimum(counts, K)
+    return (np.arange(K)[None, :] < take[:, None]).astype(np.float32)
 
 
 def build_padded_inputs(
@@ -61,6 +64,7 @@ def build_padded_inputs(
     store,
     K: int = 8,
     payload_branches: list[str] | None = None,
+    include_index: bool = False,
 ) -> PaddedBatch:
     """Build dense kernel inputs from columnar (host) data.
 
@@ -68,56 +72,76 @@ def build_padded_inputs(
     their ``n<Coll>`` counts).  ``K`` caps objects/event (overflow objects
     are dropped from *filtering only* — counts-based cuts use true counts
     via validity, see below).
+
+    ``include_index=True`` prepends a local-event-index column to the
+    payload: after stream compaction the survivor rows carry their own
+    source indices, so the host can reconstruct the boolean mask from the
+    compacted output alone — the mask itself never has to leave the device
+    (DESIGN.md §6).  float32 holds indices exactly up to 2**24 events,
+    far above any window size.
     """
     flat_names = [n for n in data if not (store.branches.get(n) and store.branches[n].jagged)]
     n_events = len(data[flat_names[0]])
 
-    dense_cache: dict[str, tuple[np.ndarray, np.ndarray]] = {}
-
-    def dense(branch: str) -> tuple[np.ndarray, np.ndarray]:
-        if branch in dense_cache:
-            return dense_cache[branch]
-        br = store.branches.get(branch)
-        if br is not None and br.jagged:
-            counts = data[br.counts_branch].astype(np.int64)
-            out = _padded_collection(np.asarray(data[branch]), counts, K)
-        else:
-            col = np.asarray(data[branch], dtype=np.float32).reshape(-1, 1)
-            v = np.zeros((n_events, K), np.float32)
-            v[:, 0] = 1.0
-            x = np.zeros((n_events, K), np.float32)
-            x[:, 0] = col[:, 0]
-            out = (x, v)
-        dense_cache[branch] = out
-        return out
-
     T = program.n_terms
     G = program.n_groups
+    # preallocate and fill views in place: flat branches touch only slot 0
+    # of their zero pages, jagged branches scatter exactly once — this is
+    # the per-window hot path of the fused executor
     terms = np.zeros((T, n_events, K), np.float32)
     valid = np.zeros((G, n_events, K), np.float32)
     weights = np.zeros((G, n_events, K), np.float32)
 
-    for t, branch in enumerate(program.term_branches):
-        terms[t] = dense(branch)[0]
-    for g, (coll, wbranch) in enumerate(
-        zip(program.group_collections, program.group_weights)
-    ):
-        if coll is not None:
-            ref_branch = next(
-                program.term_branches[t] for t in program.groups[g].term_ids
-            )
-            valid[g] = dense(ref_branch)[1]
+    values_cache: dict[str, np.ndarray] = {}  # scatter each branch once
+
+    def fill_values(target: np.ndarray, branch: str) -> None:
+        br = store.branches.get(branch)
+        if br is not None and br.jagged:
+            if branch not in values_cache:
+                _scatter_jagged(
+                    target,
+                    np.asarray(data[branch]),
+                    np.asarray(data[br.counts_branch], dtype=np.int64),
+                )
+                values_cache[branch] = target
+            else:
+                np.copyto(target, values_cache[branch])
         else:
-            anchor = program.term_branches[program.groups[g].term_ids[0]]
-            valid[g] = dense(anchor)[1]
+            target[:, 0] = np.asarray(data[branch], dtype=np.float32)
+
+    validity_cache: dict[str, np.ndarray] = {}  # keyed by counts branch
+
+    def validity_of(branch: str) -> np.ndarray:
+        br = store.branches.get(branch)
+        key = br.counts_branch if (br is not None and br.jagged) else ""
+        if key not in validity_cache:
+            if key:  # one validity per collection, shared by its branches
+                validity_cache[key] = _collection_validity(
+                    np.asarray(data[key], dtype=np.int64), K
+                )
+            else:  # flat branches live in slot 0 only
+                v = np.zeros((n_events, K), np.float32)
+                v[:, 0] = 1.0
+                validity_cache[key] = v
+        return validity_cache[key]
+
+    for t, branch in enumerate(program.term_branches):
+        fill_values(terms[t], branch)
+    for g, wbranch in enumerate(program.group_weights):
+        anchor = program.term_branches[program.groups[g].term_ids[0]]
+        valid[g] = validity_of(anchor)
         if wbranch is not None:
-            weights[g] = dense(wbranch)[0]
+            fill_values(weights[g], wbranch)
 
     payload_branches = payload_branches or []
-    if payload_branches:
-        payload = np.stack(
-            [np.asarray(data[b], dtype=np.float32) for b in payload_branches], axis=1
-        )
+    pay_cols = []
+    if include_index:
+        if n_events >= 1 << 24:
+            raise ValueError("window too large for exact float32 index payload")
+        pay_cols.append(np.arange(n_events, dtype=np.float32))
+    pay_cols.extend(np.asarray(data[b], dtype=np.float32) for b in payload_branches)
+    if pay_cols:
+        payload = np.stack(pay_cols, axis=1)
     else:
         payload = np.zeros((n_events, 1), np.float32)
 
@@ -140,8 +164,193 @@ def skim_mask(batch_terms, batch_valid, batch_weights, program: Program):
     return kref.predicate_eval_ref(batch_terms, batch_valid, batch_weights, program)
 
 
+# numpy mirror of kernels.ref.apply_op, keyed by the compiled op ids
+_NP_OPS = {
+    kref.OP_GT: np.greater,
+    kref.OP_GE: np.greater_equal,
+    kref.OP_LT: np.less,
+    kref.OP_LE: np.less_equal,
+    kref.OP_EQ: np.equal,
+    kref.OP_NE: np.not_equal,
+    kref.OP_ABSLT: lambda x, v: np.abs(x) < v,
+    kref.OP_ABSGT: lambda x, v: np.abs(x) > v,
+}
+
+
+def program_eval_np(
+    data: dict[str, np.ndarray], program: Program, n_events: int
+) -> np.ndarray:
+    """Host interpreter for a compiled :class:`Program` over the *jagged*
+    columnar layout (no padding).
+
+    This is the fused executor's CPU fallback: one pass over the compiled
+    groups, semantically identical to ``repro.core.query.eval_stage`` run
+    over every stage (same float64 segment accumulation, so masks are
+    bit-identical to the reference path) and to the device kernels modulo
+    their float32 reductions.  On jagged data it skips the (T, E, K)
+    densification entirely, which is what makes ``fused=True`` at least
+    as fast as the staged evaluator on backends without a real
+    accelerator.
+    """
+    mask = np.ones(n_events, dtype=bool)
+    for g, grp in enumerate(program.groups):
+        coll = program.group_collections[g]
+        if grp.kind == kref.GROUP_ANY:
+            gpass = np.zeros(n_events, dtype=bool)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                gpass |= np.asarray(
+                    _NP_OPS[op](data[program.term_branches[t]], thr), dtype=bool
+                )
+        elif coll is None:
+            # flat-branch cut compiled as a one-term COUNT group
+            t, op, thr = grp.term_ids[0], grp.ops[0], grp.thrs[0]
+            passing = np.asarray(
+                _NP_OPS[op](data[program.term_branches[t]], thr), dtype=bool
+            )
+            gpass = passing.astype(np.int64) >= grp.min_count
+        else:
+            counts = np.asarray(data[f"n{coll}"], dtype=np.int64)
+            ids = np.repeat(np.arange(n_events), counts)
+            passing = np.ones(int(counts.sum()), dtype=bool)
+            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
+                passing &= np.asarray(
+                    _NP_OPS[op](data[program.term_branches[t]], thr), dtype=bool
+                )
+            if grp.kind == kref.GROUP_COUNT:
+                per_event = np.bincount(
+                    ids, weights=passing.astype(np.float64), minlength=n_events
+                )
+                gpass = per_event >= grp.min_count
+            else:  # GROUP_HT
+                w = np.asarray(data[program.group_weights[g]], dtype=np.float64)
+                ht = np.bincount(ids, weights=w * passing, minlength=n_events)
+                gpass = np.asarray(
+                    _NP_OPS[grp.cmp_op](ht, grp.cmp_thr), dtype=bool
+                )
+        mask &= gpass
+    return mask
+
+
 def compact_jnp(payload: jnp.ndarray, mask: jnp.ndarray):
     return kref.stream_compact_ref(payload, mask)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def window_pad_K(data: dict[str, np.ndarray], program: Program, store) -> int:
+    """Smallest pow2 object capacity that loses no object of any jagged
+    branch the program reads — guarantees the padded device evaluation is
+    bit-identical to the host evaluator (no overflow truncation)."""
+    K = 1
+    seen: set[str] = set()
+    branches = set(program.term_branches) | {
+        w for w in program.group_weights if w is not None
+    }
+    for name in branches:
+        br = store.branches.get(name)
+        if br is None or not br.jagged or br.counts_branch in seen:
+            continue
+        seen.add(br.counts_branch)
+        counts = np.asarray(data[br.counts_branch])
+        if len(counts):
+            K = max(K, int(counts.max()))
+    return _next_pow2(K)
+
+
+_WINDOW_QUANTUM = 512  # event-axis padding multiple (fused kernel tile)
+
+
+def fused_window_skim(
+    data: dict[str, np.ndarray],
+    program: Program,
+    store,
+    payload_branches: list[str] | tuple[str, ...] = (),
+    K: int | None = None,
+    pad_to: int | None = None,
+    backend: str | None = None,
+) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+    """One-pass skim of a decoded window (the engine's fused path).
+
+    Evaluates the compiled predicate AND compacts the survivor payload in
+    a single pass over the window, on the best executor for the backend:
+
+      * ``"pallas"`` — the fused VMEM kernel (``kernels.skim_fused``):
+        pad the window once, then predicate + one-hot MXU compaction per
+        event tile.  Default on TPU.
+      * ``"xla"``    — the kernel's jitted jnp oracle over the same
+        padded layout (validation / non-TPU accelerators).
+      * ``"host"``   — the compiled-program interpreter over the native
+        jagged layout (:func:`program_eval_np`); skips densification,
+        which is what makes ``fused=True`` fast on plain CPUs.  Default
+        off-TPU.
+
+    All three produce bit-identical survivor sets on the repo fixtures
+    (pinned by tests/test_pipeline_executor.py).  Returns the boolean
+    survivor mask and the compacted payload columns (survivor-only, event
+    order).
+
+    ``pad_to`` fixes the padded event-axis shape (e.g. to the engine's
+    window size) so every window of a skim hits the same compiled kernel.
+    Padding events get index >= n_events in the payload index column and
+    are dropped after compaction, so a predicate that happens to accept
+    an all-zero event (e.g. ``HT < x``) cannot leak phantom survivors.
+    """
+    import jax
+
+    from repro.kernels import ops
+
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "host"
+
+    flat = next(
+        n for n in data if not (store.branches.get(n) and store.branches[n].jagged)
+    )
+    E = len(data[flat])
+
+    if backend == "host":
+        mask = program_eval_np(data, program, E)
+        cols = {
+            name: np.asarray(data[name])[mask] for name in payload_branches
+        }
+        return mask, cols
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown fused backend {backend!r}")
+
+    if K is None:
+        K = window_pad_K(data, program, store)
+    pb = build_padded_inputs(
+        data, program, store, K=K,
+        payload_branches=list(payload_branches), include_index=True,
+    )
+    target = -(-max(E, pad_to or E) // _WINDOW_QUANTUM) * _WINDOW_QUANTUM
+    terms, valid, weights, payload = pb.terms, pb.valid, pb.weights, pb.payload
+    if target > E:
+        pad = target - E
+        terms = jnp.pad(terms, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad), (0, 0)))
+        weights = jnp.pad(weights, ((0, 0), (0, pad), (0, 0)))
+        payload = jnp.pad(payload, ((0, pad), (0, 0)))
+        payload = payload.at[E:, 0].set(jnp.arange(E, target, dtype=jnp.float32))
+
+    packed, count = ops.fused_skim(
+        terms, valid, weights, payload, program, use_pallas=(backend == "pallas")
+    )
+    k = int(count)
+    packed = np.asarray(packed[:k])
+    idx = packed[:, 0].astype(np.int64)
+    real = idx < E  # drop phantom survivors from event-axis padding
+    packed, idx = packed[real], idx[real]
+    mask = np.zeros(E, dtype=bool)
+    mask[idx] = True
+    cols = {
+        name: packed[:, 1 + j].astype(
+            store.branches[name].np_dtype() if name in store.branches else np.float32
+        )
+        for j, name in enumerate(payload_branches)
+    }
+    return mask, cols
 
 
 def sharded_skim(mesh, program: Program, data_axes=("pod", "data")):
@@ -184,5 +393,8 @@ __all__ = [
     "build_padded_inputs",
     "skim_mask",
     "compact_jnp",
+    "program_eval_np",
+    "fused_window_skim",
+    "window_pad_K",
     "sharded_skim",
 ]

@@ -26,6 +26,20 @@ class SkimPlan:
         default_factory=lambda: ["preselection", "object", "event"]
     )
     excluded_by_optimization: list[str] = field(default_factory=list)
+    # flat float32 branches in both the filter and output sets: the fused
+    # device path compacts these alongside the survivor indices, so their
+    # output columns come straight off the kernel (DESIGN.md §4).
+    payload_branches: list[str] = field(default_factory=list)
+    _program: object = None
+
+    def compiled_program(self):
+        """Device predicate program, compiled once per skim (lazy — host-only
+        paths never pull in the kernel stack)."""
+        if self._program is None:
+            from repro.kernels.predicate_eval import compile_query
+
+            self._program = compile_query(self.query)
+        return self._program
 
     def describe(self) -> str:
         return (
@@ -52,10 +66,19 @@ def plan_skim(query: Query, store) -> SkimPlan:
     output_branches = with_counts_branches(selected, store)
     output_only = [b for b in output_branches if b not in set(filter_branches)]
 
+    payload = [
+        b
+        for b in output_branches
+        if b in set(filter_branches)
+        and not store.branches[b].jagged
+        and store.branches[b].np_dtype() == "float32"
+    ]
+
     return SkimPlan(
         query=query,
         filter_branches=filter_branches,
         output_branches=output_branches,
         output_only_branches=output_only,
         excluded_by_optimization=excluded,
+        payload_branches=payload,
     )

@@ -1,5 +1,11 @@
 from repro.data.codecs import CODECS, decode_basket, encode_basket
-from repro.data.store import Branch, EventStore, FetchStats
+from repro.data.store import (
+    TTREECACHE_BYTES,
+    Branch,
+    EventStore,
+    FetchStats,
+    WindowPrefetcher,
+)
 from repro.data.synth import make_nanoaod_like
 
 __all__ = [
@@ -9,5 +15,7 @@ __all__ = [
     "Branch",
     "EventStore",
     "FetchStats",
+    "WindowPrefetcher",
+    "TTREECACHE_BYTES",
     "make_nanoaod_like",
 ]

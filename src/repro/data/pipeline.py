@@ -5,6 +5,13 @@ front-end is the two-phase skim (only filter branches are decoded for all
 events; survivors' output branches feed the tokenizer), sharded over the
 data axis.  Batches are a pure function of (seed, step) so restarts replay
 exactly (fault.py's determinism contract).
+
+The skim front-end runs the **pipelined fused executor** (DESIGN.md §4):
+basket windows are fetched + decoded by the double-buffered
+:class:`~repro.data.store.WindowPrefetcher` (re-exported here) while the
+previous window filters through the fused predicate+compact device pass —
+so tokenization is fed at ``max(fetch+decode, filter)`` rate per window
+rather than their sum.
 """
 
 from __future__ import annotations
@@ -15,6 +22,7 @@ import numpy as np
 
 from repro.core.engine import SkimEngine, PCIE_128G
 from repro.core.query import parse_query
+from repro.data.store import WindowPrefetcher  # noqa: F401  (public re-export)
 
 
 @dataclass
@@ -65,6 +73,7 @@ class SkimTokenPipeline:
         self._tokens = self._build_token_pool()
 
     def _build_token_pool(self) -> np.ndarray:
+        # fused+pipelined near-data skim (the SkimEngine defaults)
         engine = SkimEngine(self.store, input_link=PCIE_128G)
         res = engine.run(self.query, mode="near_data")
         self.stats.events_seen = res.n_input

@@ -12,6 +12,12 @@ range and get compressed blobs back; decompression and deserialization are
 separate, *timed* stages in ``repro.core.engine`` (matching the paper's
 operation breakdown).  A ``FetchStats`` object accounts every byte and
 request so the network model (1/10/100 Gb/s tiers) stays honest.
+
+Window-granular reading lives here too: :meth:`EventStore.fetch_window`
+is the explicit TTreeCache round (all baskets a read round needs, bulk
+request accounting — DESIGN.md §2b) and :class:`WindowPrefetcher` is the
+double-buffered loader the pipelined near-data executor uses to overlap
+fetch+decode of window *i+1* with filtering of window *i* (DESIGN.md §4b).
 """
 
 from __future__ import annotations
@@ -23,6 +29,11 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.data.codecs import decode_basket, encode_basket
+
+# Paper §4: "A 100 MB TTreeCache is used in all methods".  The coalesced
+# window fetch aggregates every basket a read round needs into bulk
+# requests of at most this size (DESIGN.md §2b).
+TTREECACHE_BYTES = 100 * 1024 * 1024
 
 
 @dataclass
@@ -61,6 +72,79 @@ class FetchStats:
         self.requests += other.requests
         for k, v in other.by_branch.items():
             self.by_branch[k] = self.by_branch.get(k, 0) + v
+
+
+class WindowPrefetcher:
+    """Double-buffered basket-window loader (DESIGN.md §4).
+
+    The paper's TTreeCache batching made explicit *and* asynchronous:
+    while the consumer filters window *i*, one background worker fetches
+    and decodes window *i+1*, so the pipeline bound per window is
+    ``max(fetch+decode, filter)`` instead of their sum.
+
+    ``load_fn(start, stop)`` runs in the worker thread and must touch only
+    thread-local state; whatever it returns (decoded columns plus
+    per-window ``FetchStats``/timing objects) is handed back to the
+    consumer strictly in window order, so merging the accounting on the
+    consumer side is deterministic and byte-identical to the serial
+    schedule (pinned by tests/test_pipeline_executor.py).
+
+    ``depth`` is the number of windows in flight (2 = classic double
+    buffering); ``enabled=False`` degrades to the serial schedule with the
+    same iteration contract, which is what the serial/pipelined
+    invariance tests compare against.
+    """
+
+    def __init__(
+        self,
+        n_events: int,
+        window_events: int,
+        load_fn,
+        depth: int = 2,
+        enabled: bool = True,
+    ):
+        if window_events <= 0:
+            raise ValueError("window_events must be positive")
+        self.n_events = int(n_events)
+        self.window_events = int(window_events)
+        self.load_fn = load_fn
+        self.depth = max(int(depth), 1)
+        self.enabled = enabled
+
+    def windows(self) -> list[tuple[int, int]]:
+        return [
+            (s, min(s + self.window_events, self.n_events))
+            for s in range(0, self.n_events, self.window_events)
+        ]
+
+    def __iter__(self):
+        spans = self.windows()
+        if not self.enabled:
+            for start, stop in spans:
+                yield start, stop, self.load_fn(start, stop)
+            return
+        from collections import deque
+        from concurrent.futures import ThreadPoolExecutor
+
+        with ThreadPoolExecutor(max_workers=1) as ex:
+            pending: deque = deque()
+            it = iter(spans)
+            for _ in range(self.depth):
+                try:
+                    s, e = next(it)
+                except StopIteration:
+                    break
+                pending.append((s, e, ex.submit(self.load_fn, s, e)))
+            while pending:
+                start, stop, fut = pending.popleft()
+                payload = fut.result()
+                try:
+                    s, e = next(it)
+                    pending.append((s, e, ex.submit(self.load_fn, s, e)))
+                except StopIteration:
+                    pass
+                # the next window is now decoding while the consumer works
+                yield start, stop, payload
 
 
 class EventStore:
@@ -211,6 +295,45 @@ class EventStore:
             out.append((self._baskets[name][i], blob))
         if stats is not None:
             stats.record(name, total, n_requests=1 if coalesce else max(len(ids), 1))
+        return out
+
+    def fetch_window(
+        self,
+        names: list[str],
+        start: int,
+        stop: int,
+        stats: FetchStats | None = None,
+        coalesce: bool = True,
+        cache_bytes: int = TTREECACHE_BYTES,
+    ) -> dict[str, list[tuple[BasketMeta, bytes]]]:
+        """Fetch every basket of ``names`` overlapping [start, stop) as one
+        read round — the TTreeCache model made explicit.
+
+        ``coalesce=True``: all baskets of the round are aggregated into
+        bulk requests of at most ``cache_bytes`` (one request for typical
+        windows), which is what the prefetcher overlaps with compute.
+        ``coalesce=False``: one request (seek) per basket — the paper's
+        on-demand local-read behavior for server-side filtering.
+        """
+        out: dict[str, list[tuple[BasketMeta, bytes]]] = {}
+        local = FetchStats()
+        for name in names:
+            out[name] = self.fetch_range(
+                name, start, stop, stats=local, coalesce=coalesce
+            )
+        if stats is not None:
+            if coalesce:
+                n_req = (
+                    max(1, -(-local.bytes_fetched // cache_bytes))
+                    if local.bytes_fetched
+                    else 0
+                )
+                stats.bytes_fetched += local.bytes_fetched
+                stats.requests += n_req
+                for k, v in local.by_branch.items():
+                    stats.by_branch[k] = stats.by_branch.get(k, 0) + v
+            else:
+                stats.merge(local)
         return out
 
     def decode_blob(self, name: str, blob: bytes) -> np.ndarray:

@@ -7,6 +7,8 @@ kernels' tile multiples and slice results back.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -116,19 +118,41 @@ def skim_fused(terms, valid, weights, payload, program: Program, interpret=None)
         interpret=interpret, event_tile=tile,
     )
     # stitch tiles at global offsets (same epilogue as stream_compact)
-    D = payload_p.shape[1]
-    n_tiles = packed_tiles.shape[0] // tile
-    tiles = packed_tiles.reshape(n_tiles, tile, D)
-    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
-
-    def place(acc, inp):
-        t, off = inp
-        cur = jax.lax.dynamic_slice(acc, (off, 0), (tile, D))
-        return jax.lax.dynamic_update_slice(acc, cur + t, (off, 0)), None
-
-    out0 = jnp.zeros((packed_tiles.shape[0] + tile, D), payload_p.dtype)
-    out, _ = jax.lax.scan(place, out0, (tiles, offsets))
+    out = _sf.stitch_tiles(packed_tiles, counts, event_tile=tile)
     return out[:E], counts.sum()
+
+
+@functools.partial(jax.jit, static_argnames=("program",))
+def _fused_ref(terms, valid, weights, payload, *, program):
+    """Jitted oracle composition: same semantics as the fused Pallas kernel
+    (one XLA program, no interpret-mode overhead on CPU backends)."""
+    from repro.kernels import ref
+
+    mask = ref.predicate_eval_ref(terms, valid, weights, program)
+    return ref.stream_compact_ref(payload, mask)
+
+
+def fused_skim(terms, valid, weights, payload, program: Program, use_pallas=None):
+    """Backend-dispatched one-pass skim (the engine's device path).
+
+    On TPU this is the fused Pallas kernel (predicate + compaction in one
+    VMEM round trip); elsewhere the jitted jnp oracle with identical
+    semantics — the equivalence is pinned by tests/test_skim_fused.py.
+    Returns (packed (E, D) survivors-first, count).
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return skim_fused(
+            terms, valid, weights, payload, program, interpret=default_interpret()
+        )
+    return _fused_ref(
+        jnp.asarray(terms, jnp.float32),
+        jnp.asarray(valid, jnp.float32),
+        jnp.asarray(weights, jnp.float32),
+        jnp.asarray(payload),
+        program=program,
+    )
 
 
 def flash_attention(q, k, v, causal=True, sm_scale=None, block_q=None,

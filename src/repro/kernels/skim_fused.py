@@ -1,4 +1,4 @@
-"""Fused predicate-eval + stream-compact kernel (beyond-paper).
+"""Fused predicate-eval + stream-compact kernel (beyond-paper; DESIGN.md §6).
 
 The paper evaluates the predicate, then gathers survivors — two passes
 over the event data.  On TPU both fit in one VMEM round trip: each event
@@ -7,6 +7,15 @@ rows via the one-hot MXU permutation in the same kernel body, so the mask
 never travels to HBM.  One pass, one output stream — exactly the "return
 only the filtered data" contract, minus a full HBM round trip of the
 payload + mask.
+
+Data-layout contract (the engine's ``near_data`` fast path rides on it):
+inputs are the padded window tensors from
+``repro.core.neardata.build_padded_inputs`` — terms (T, E, K), validity /
+HT weights (G, E, K), payload (E, D) — and by convention payload column 0
+is the *local event index*, so the compacted output alone lets the host
+recover the survivor mask without the mask ever leaving the device.
+Tiles are stitched to a globally front-packed stream by
+:func:`stitch_tiles`.
 """
 
 from __future__ import annotations
@@ -56,6 +65,29 @@ def _fused_kernel(terms_ref, valid_ref, weights_ref, payload_ref,
         preferred_element_type=jnp.float32,
     ).astype(out_ref.dtype)
     count_ref[0] = mask.astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("event_tile",))
+def stitch_tiles(packed_tiles, counts, *, event_tile: int):
+    """Place each tile's front-packed rows at its global offset.
+
+    Rows beyond a tile's survivor count are zero and tiles write to
+    disjoint [off, off+count) ranges, so accumulate-add is exact.  Shared
+    epilogue of the fused and two-pass compaction paths.
+    """
+    E, D = packed_tiles.shape
+    n_tiles = E // event_tile
+    tiles = packed_tiles.reshape(n_tiles, event_tile, D)
+    offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+
+    def place(acc, inp):
+        tile, off = inp
+        cur = jax.lax.dynamic_slice(acc, (off, 0), (event_tile, D))
+        return jax.lax.dynamic_update_slice(acc, cur + tile, (off, 0)), None
+
+    out0 = jnp.zeros((E + event_tile, D), packed_tiles.dtype)
+    out, _ = jax.lax.scan(place, out0, (tiles, offsets))
+    return out[:E]
 
 
 @functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))

@@ -1,19 +1,235 @@
-"""Serving engine: batched single-token decode against preallocated caches.
+"""Serving layer: shared-scan skim batching + LM decode serving.
 
-``make_serve_step`` is what the dry-run lowers for the ``decode_*`` /
-``long_*`` shapes; :class:`ServeEngine` is the host-level request loop
-used by the examples (continuous batching over a fixed slot pool).
+Two multi-tenant engines live here:
+
+  * :class:`SharedScanEngine` — the skim service path (DESIGN.md §4c).
+    N concurrent tenant queries execute over ONE pass of the same
+    dataset: the union of their filter branches is fetched + decoded once
+    per basket window (double-buffered behind filtering), then each
+    query's compiled predicate program runs against the shared decoded
+    window.  I/O and decode amortize across tenants — the paper's
+    interactive-rate multi-user skimming regime — while each tenant still
+    gets a private phase-2 (survivor-only output fetch) and its own
+    :class:`~repro.core.engine.SkimResult`, bit-identical to running the
+    query alone.
+  * :class:`ServeEngine` — batched single-token LM decode against
+    preallocated caches (continuous batching over a fixed slot pool);
+    ``make_serve_step`` is what the dry-run lowers for the ``decode_*`` /
+    ``long_*`` shapes.
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import (
+    PCIE_128G,
+    Breakdown,
+    NetworkModel,
+    SkimResult,
+    _concat_output,
+    _decode_branches,
+    _Timer,
+    _window_phase2,
+    _write_output,
+)
+from repro.core.planner import plan_skim
+from repro.core.query import Query, parse_query
+from repro.data.store import EventStore, FetchStats, WindowPrefetcher
 from repro.models.model import decode_step, init_cache, prefill
+
+
+# ---------------------------------------------------------------------------
+# shared-scan skim service
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SharedScanResult:
+    """Batch result of one shared scan over N tenant queries."""
+
+    results: list[SkimResult]  # per-query, in request order
+    shared_stats: FetchStats  # the single phase-1 pass (union branches)
+    shared_breakdown: Breakdown  # fetch/decode of that pass (+ modeled link)
+    naive_phase1_bytes: int  # what N independent scans would have fetched
+    wall_s: float = 0.0
+
+    @property
+    def n_queries(self) -> int:
+        return len(self.results)
+
+    @property
+    def saved_bytes(self) -> int:
+        """Phase-1 bytes the shared scan avoided vs N independent skims."""
+        return self.naive_phase1_bytes - self.shared_stats.bytes_fetched
+
+    @property
+    def amortization(self) -> float:
+        """naive/shared phase-1 byte ratio (>= 1; ~N for similar queries)."""
+        return self.naive_phase1_bytes / max(self.shared_stats.bytes_fetched, 1)
+
+
+class SharedScanEngine:
+    """Multi-tenant skim executor: N queries, one pass over the dataset.
+
+    Phase 1 fetches + decodes the *union* of all tenants' filter branches
+    once per basket window (prefetched double-buffered, like the
+    single-query pipelined executor) and evaluates every tenant's
+    compiled predicate program against the shared decoded window.  Phase
+    2 stays per-tenant: only baskets holding that tenant's survivors
+    move, into that tenant's private output.  Per-query outputs are
+    bit-identical to running each query alone through
+    ``SkimEngine.run(..., mode="near_data")``.
+    """
+
+    def __init__(
+        self,
+        store: EventStore,
+        input_link: NetworkModel = PCIE_128G,
+        output_link: NetworkModel | None = None,
+        chunk_events: int | None = None,
+        fused: bool = True,
+        pipeline: bool | str = False,
+    ):
+        self.store = store
+        self.input_link = input_link
+        self.output_link = output_link or input_link
+        self.chunk_events = chunk_events or store.basket_events
+        self.fused = fused
+        # False = serial window loop; "threads" = real WindowPrefetcher
+        # worker.  (The modeled pipeline schedule is a single-query
+        # SkimEngine feature; the shared scan's win is byte amortization.)
+        if pipeline not in (False, "threads"):
+            raise ValueError(
+                f"pipeline must be False or 'threads', got {pipeline!r}"
+            )
+        self.pipeline = pipeline
+
+    def run_batch(self, queries: list[Query | dict | str]) -> SharedScanResult:
+        from repro.core.neardata import fused_window_skim, window_pad_K
+
+        store, chunk = self.store, self.chunk_events
+        n = store.n_events
+        t0 = time.perf_counter()
+
+        parsed = [q if isinstance(q, Query) else parse_query(q) for q in queries]
+        plans = [plan_skim(q, store) for q in parsed]
+        programs = [p.compiled_program() if self.fused else None for p in plans]
+
+        # union of filter branches, first-seen order (deterministic)
+        union: list[str] = []
+        seen: set[str] = set()
+        for plan in plans:
+            for br in plan.filter_branches:
+                if br not in seen:
+                    seen.add(br)
+                    union.append(br)
+
+        shared_b, shared_stats = Breakdown(), FetchStats()
+
+        def load_window(start: int, stop: int):
+            lb, ls = Breakdown(), FetchStats()
+            data = _decode_branches(store, union, start, stop, lb, ls, coalesce=True)
+            return data, lb, ls
+
+        # per-query accumulation state
+        per_b = [Breakdown() for _ in plans]
+        per_stats = [FetchStats() for _ in plans]
+        out_cols = [{k: [] for k in p.output_branches} for p in plans]
+        jagged_maps: list[dict[str, str]] = [{} for _ in plans]
+        n_passed = [0] * len(plans)
+        pad_K = [0] * len(plans)  # monotonic per-query pad shapes
+
+        src = WindowPrefetcher(
+            n, chunk, load_window, enabled=(self.pipeline == "threads")
+        )
+        for start, stop, (data, lb, ls) in src:
+            shared_b.merge(lb)
+            shared_stats.merge(ls)
+            m = stop - start
+            for i, plan in enumerate(plans):
+                b = per_b[i]
+                dev_cols: dict[str, np.ndarray] = {}
+                with _Timer(b, "filter"):
+                    if not plan.filter_branches:
+                        # selection-free tenant: pure projection
+                        mask = np.ones(m, dtype=bool)
+                    elif self.fused:
+                        pad_K[i] = max(
+                            pad_K[i], window_pad_K(data, programs[i], store)
+                        )
+                        mask, dev_cols = fused_window_skim(
+                            data, programs[i], store,
+                            payload_branches=plan.payload_branches,
+                            K=pad_K[i],
+                            pad_to=chunk,
+                        )
+                    else:
+                        from repro.core.query import eval_stage
+
+                        mask = np.ones(m, dtype=bool)
+                        for _, stage in plan.query.stages():
+                            if stage and mask.any():
+                                mask &= eval_stage(stage, data, m)
+                k = int(mask.sum())
+                if k == 0:
+                    continue
+                n_passed[i] += k
+                cols, jagged = _window_phase2(
+                    store, plan, start, stop, mask, dev_cols, data, b,
+                    per_stats[i], coalesce=True,
+                )
+                jagged_maps[i].update(jagged)
+                for k2, v in cols.items():
+                    out_cols[i][k2].append(v)
+
+        # phase-1 link time is paid once for the whole batch
+        shared_b.fetch = self.input_link.transfer_time(
+            shared_stats.bytes_fetched, shared_stats.requests
+        )
+
+        results: list[SkimResult] = []
+        for i, plan in enumerate(plans):
+            b = per_b[i]
+            cat = _concat_output(out_cols[i], n_passed[i], plan, store)
+            out = _write_output(cat, jagged_maps[i], store, b)
+            b.fetch = self.input_link.transfer_time(
+                per_stats[i].bytes_fetched, per_stats[i].requests
+            )
+            out_bytes = out.compressed_bytes()
+            b.output_transfer = self.output_link.transfer_time(out_bytes, 1)
+            results.append(
+                SkimResult(
+                    "shared_scan", out, n, n_passed[i], b, per_stats[i], plan,
+                    extras={
+                        "output_bytes": out_bytes,
+                        "fused": self.fused,
+                        "pipelined": self.pipeline == "threads",
+                        "shared_scan": True,
+                    },
+                )
+            )
+
+        naive = sum(
+            store.compressed_bytes(p.filter_branches) for p in plans
+        )
+        return SharedScanResult(
+            results=results,
+            shared_stats=shared_stats,
+            shared_breakdown=shared_b,
+            naive_phase1_bytes=naive,
+            wall_s=time.perf_counter() - t0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# LM decode serving
+# ---------------------------------------------------------------------------
 
 
 def make_serve_step(cfg):

@@ -92,7 +92,10 @@ print("RESHARD_OK")
 def test_reshard_on_load_elastic(tmp_path):
     """Save on a 4x2 mesh, restore onto 2x4 — the elastic-scaling path."""
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # force the CPU platform: images bundling libtpu make an unset
+    # JAX_PLATFORMS probe for TPUs for minutes before falling back,
+    # blowing the subprocess timeout (host-device forcing needs cpu anyway)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", RESHARD_SCRIPT, str(tmp_path)],
         capture_output=True,

@@ -106,7 +106,10 @@ print("SHARDED_OK", int(total))
 
 def test_sharded_skim_multidevice():
     env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
+    # force the CPU platform: images bundling libtpu make an unset
+    # JAX_PLATFORMS probe for TPUs for minutes before falling back,
+    # blowing the subprocess timeout (host-device forcing needs cpu anyway)
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run(
         [sys.executable, "-c", SHARDED_SCRIPT],
         capture_output=True, text=True,
