@@ -4,13 +4,17 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench lint quickstart
+.PHONY: test bench smoke lint quickstart
 
 test:  ## tier-1 suite
 	$(PY) -m pytest -x -q
 
 bench:  ## full benchmark harness (CSV on stdout)
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+smoke:  ## fast benchmark smoke (executor + cluster; the CI step)
+	PYTHONPATH=src:. $(PY) benchmarks/bench_pipeline.py --smoke
+	PYTHONPATH=src:. $(PY) benchmarks/bench_cluster.py --smoke
 
 lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
 	ruff check src tests benchmarks examples

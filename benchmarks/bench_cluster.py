@@ -1,0 +1,124 @@
+"""Distributed skim cluster: 1→8 node scaling + result-cache warm/cold.
+
+Scatter-gather over window-aligned shards (DESIGN.md §5): each node
+runs the pipelined fused executor against its shard at the SSD input
+tier, and the coordinator's modeled cluster wall-clock is
+``max`` over nodes of the per-node pipeline bound plus the measured
+merge.  Reported per node count:
+
+  * modeled end-to-end seconds (the suite's common currency),
+  * the slowest node's bound and the merge cost (the scaling floor),
+  * events/s on the modeled base.
+
+The cache rows run the same query twice through a content-addressed
+result cache: the warm run serves every shard from cache (phase 1 and 2
+skipped entirely) and pays only output transfer + merge.
+
+Asserted: merged output equals the single-node run (count), 8-node
+modeled wall-clock < single-node, warm < cold.
+
+``--smoke`` shrinks the store for CI.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common
+from benchmarks.common import QUERY, csv_row
+from repro.cluster import SkimResultCache, build_cluster
+from repro.core.engine import LOCAL_DISK
+
+NODE_COUNTS = (1, 2, 4, 8)
+REPEATS = 2
+
+
+def _best_run(coord, repeats: int):
+    best = None
+    for _ in range(repeats):
+        res = coord.run(QUERY)
+        if best is None or res.modeled_total_s < best.modeled_total_s:
+            best = res
+    return best
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        common.N_EVENTS = min(common.N_EVENTS, 20_000)
+    # best-of-N even in smoke: the merge stage is measured host time and
+    # this container's clocks are coarse (single runs are too noisy for
+    # the 8-node-vs-1 assertion at small scale)
+    repeats = REPEATS
+    store = common.get_store("bitpack")
+
+    out: dict = {}
+    for n in NODE_COUNTS:
+        coord = build_cluster(
+            store, n, replication=False, near_input_link=LOCAL_DISK
+        )
+        coord.run(QUERY)  # warm numpy/jit paths so stage timings are clean
+        res = _best_run(coord, repeats)
+        slowest = max(r.modeled_s for r in res.responses)
+        out[n] = {
+            "modeled_s": res.modeled_total_s,
+            "slowest_node_s": slowest,
+            "merge_s": res.merge_s,
+            "n_passed": res.n_passed,
+            "events_per_s": store.n_events / max(res.modeled_total_s, 1e-9),
+        }
+        csv_row(
+            f"cluster/nodes{n}/modeled", res.modeled_total_s * 1e6,
+            "max-over-nodes + merge, SSD-tier input",
+        )
+        csv_row(f"cluster/nodes{n}/slowest_node", slowest * 1e6, "pipeline bound")
+        csv_row(f"cluster/nodes{n}/merge", res.merge_s * 1e6, "gather + re-basket")
+        csv_row(
+            f"cluster/nodes{n}/throughput", out[n]["events_per_s"],
+            f"events/s passed={res.n_passed}",
+        )
+
+    # every node count must select the same survivors
+    counts = {c["n_passed"] for c in out.values()}
+    assert len(counts) == 1, f"survivor mismatch across node counts: {out}"
+    assert out[8]["modeled_s"] < out[1]["modeled_s"], (
+        "8-node cluster not faster than single node (modeled)", out,
+    )
+    csv_row(
+        "cluster/scaling_8x", out[1]["modeled_s"] / out[8]["modeled_s"],
+        "x modeled speedup, 8 nodes vs 1",
+    )
+
+    # -- content-addressed result cache: cold vs warm -------------------------
+    cache = SkimResultCache(budget_bytes=256 << 20)
+    coord = build_cluster(
+        store, 4, replication=False, near_input_link=LOCAL_DISK, cache=cache
+    )
+    cold = coord.run(QUERY)
+    warm = coord.run(QUERY)
+    assert warm.cache_hits == 4, f"expected 4 shard hits, got {warm.cache_hits}"
+    assert warm.n_passed == cold.n_passed
+    assert warm.modeled_total_s < cold.modeled_total_s, (
+        "warm cache not faster than cold", cold.modeled_total_s,
+        warm.modeled_total_s,
+    )
+    out["cache"] = {
+        "cold_s": cold.modeled_total_s,
+        "warm_s": warm.modeled_total_s,
+        "saved_fetch_bytes": cache.stats.saved_fetch_bytes,
+    }
+    csv_row("cluster/cache_cold/modeled", cold.modeled_total_s * 1e6, "4 nodes")
+    csv_row(
+        "cluster/cache_warm/modeled", warm.modeled_total_s * 1e6,
+        f"all shards cached, {cache.stats.saved_fetch_bytes/1e6:.1f} MB "
+        "fetch skipped",
+    )
+    csv_row(
+        "cluster/cache_speedup", cold.modeled_total_s / warm.modeled_total_s,
+        "x cold/warm",
+    )
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv[1:])

@@ -26,6 +26,9 @@ Throughput rows are events/s on the modeled base.
 
 from __future__ import annotations
 
+import sys
+
+from benchmarks import common
 from benchmarks.common import QUERY, csv_row, get_store
 from repro.core.engine import LOCAL_DISK, SkimEngine, WAN_1G
 
@@ -46,7 +49,10 @@ def _modeled_total(res) -> float:
     return res.breakdown.total()
 
 
-def run() -> dict:
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        common.N_EVENTS = min(common.N_EVENTS, 20_000)
+    repeats = 1 if smoke else REPEATS
     store = get_store("bitpack")
     engine = SkimEngine(store, input_link=WAN_1G, near_input_link=LOCAL_DISK)
     # warm the caches (jit for the device backends, page cache for numpy)
@@ -55,7 +61,7 @@ def run() -> dict:
     out: dict = {}
     for name, kw in CONFIGS:
         best = None
-        for _ in range(REPEATS):
+        for _ in range(repeats):
             res = engine.run(QUERY, "near_data", **kw)
             modeled = _modeled_total(res)
             if best is None or modeled < best["modeled_s"]:
@@ -95,4 +101,4 @@ def run() -> dict:
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run()
+    run(smoke="--smoke" in sys.argv[1:])

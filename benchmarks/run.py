@@ -7,7 +7,9 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
   (ours)  -> bench_kernels, roofline (from dry-run artifacts),
              bench_pipeline (serial vs pipelined vs fused-pipelined
              near-data executor: window prefetch overlap + the fused
-             predicate/compact device pass), bench_scaling (multi-shard)
+             predicate/compact device pass), bench_cluster (1->8 node
+             scatter-gather scaling + result-cache warm/cold),
+             bench_scaling (multi-shard)
 """
 
 from __future__ import annotations
@@ -19,6 +21,7 @@ import time
 def main() -> None:
     from benchmarks import (
         bench_breakdown,
+        bench_cluster,
         bench_kernels,
         bench_latency,
         bench_nearstorage,
@@ -37,6 +40,7 @@ def main() -> None:
         (bench_utilization, "Fig5b utilization"),
         (bench_kernels, "kernel micro"),
         (bench_pipeline, "pipelined/fused executor"),
+        (bench_cluster, "distributed skim cluster"),
         (bench_scaling, "beyond-paper scaling/overlap"),
     ]:
         print(f"# --- {label} ---", file=sys.stderr)

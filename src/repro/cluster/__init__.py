@@ -1,0 +1,53 @@
+"""Distributed skim cluster (DESIGN.md §5).
+
+Sharded storage nodes + scatter-gather coordinator + content-addressed
+skim-result cache: the multi-node layer over the PR-1 single-node fast
+path.  ``build_cluster`` wires the whole stack in one call; merged
+cluster output is bit-identical to the single-node ``run_skim`` result
+for any node count, shard policy, replica retry, or cache state.
+"""
+
+from repro.cluster.cache import (
+    CacheStats,
+    SkimResultCache,
+    cache_key,
+    canonical_query,
+    query_hash,
+)
+from repro.cluster.coordinator import (
+    ClusterBatchResult,
+    ClusterCoordinator,
+    ClusterError,
+    ClusterSkimResult,
+    build_cluster,
+    merge_responses,
+)
+from repro.cluster.node import (
+    BatchResponse,
+    NodeFailure,
+    NodeResponse,
+    StorageNode,
+)
+from repro.cluster.shard import Shard, ShardMap, partition_store, window_spans
+
+__all__ = [
+    "BatchResponse",
+    "CacheStats",
+    "ClusterBatchResult",
+    "ClusterCoordinator",
+    "ClusterError",
+    "ClusterSkimResult",
+    "NodeFailure",
+    "NodeResponse",
+    "Shard",
+    "ShardMap",
+    "SkimResultCache",
+    "StorageNode",
+    "build_cluster",
+    "cache_key",
+    "canonical_query",
+    "merge_responses",
+    "partition_store",
+    "query_hash",
+    "window_spans",
+]

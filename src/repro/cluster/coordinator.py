@@ -1,0 +1,536 @@
+"""Scatter-gather skim coordinator (DESIGN.md §5b).
+
+One logical dataset, striped over N storage nodes: the coordinator
+parses and compiles a query **once**, fans it out to every node (a
+serially-deterministic loop or a thread pool), and gathers the per-shard
+results back into ONE skim result that is bit-identical to running the
+query on the unsharded store — same survivor rows in the same order,
+same counts, same output bytes.
+
+The merge works at basket-window granularity.  Every node reports its
+per-window survivor ledger (``extras["window_rows"]``, the mergeable
+result contract from ``core/engine.py``); the coordinator splits each
+shard's concatenated output back into per-window column chunks and
+reassembles them in **global window order**, which is exactly the order
+the single-node executor produced them in.  Accounting merges with
+``FetchStats.merged`` / ``Breakdown.merged`` — for aligned shards the
+cluster's fetched bytes and request counts equal the single-node run's.
+
+Failures: a node that raises :class:`NodeFailure` is retried on that
+shard's replica; stragglers only stretch the modeled makespan.  Repeat
+queries: the coordinator consults the content-addressed
+:class:`~repro.cluster.cache.SkimResultCache` per (query, shard) before
+scattering, so warm shards skip phase 1 (and everything else) entirely.
+
+Time is reported in both currencies (DESIGN.md §2c): modeled cluster
+wall-clock = ``max`` over nodes of the node-local modeled pipeline bound
+(+ injected straggle) plus the measured merge, next to the realized
+wall-clock on this host.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from repro.cluster.cache import SkimResultCache, query_hash
+from repro.cluster.node import BatchResponse, NodeFailure, NodeResponse, StorageNode
+from repro.core.engine import Breakdown
+from repro.core.query import Query, parse_query
+from repro.data.store import EventStore, FetchStats
+
+CONCURRENCY_MODES = ("serial", "threads")
+
+
+class ClusterError(RuntimeError):
+    """A shard could not be served by its primary or any replica."""
+
+
+@dataclass
+class ClusterSkimResult:
+    """Merged scatter-gather result; the cluster-level ``SkimResult``."""
+
+    output: EventStore
+    n_input: int
+    n_passed: int
+    breakdown: Breakdown  # cluster-wide work: sum over shards
+    stats: FetchStats  # cluster-wide bytes/requests: sum over shards
+    responses: list[NodeResponse]  # per shard, shard order
+    retries: list[tuple[int, int, int]]  # (shard_id, failed_node, used_node)
+    modeled_total_s: float  # max-over-nodes pipeline bound + merge
+    merge_s: float
+    wall_s: float
+    extras: dict = field(default_factory=dict)
+
+    @property
+    def selectivity(self) -> float:
+        return self.n_passed / max(self.n_input, 1)
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for r in self.responses if r.cached)
+
+
+@dataclass
+class ClusterBatchResult:
+    """Scatter-gather over a shared-scan tenant batch."""
+
+    results: list[ClusterSkimResult]  # per tenant, request order
+    shared_phase1_bytes: int  # sum of the nodes' shared passes
+    naive_phase1_bytes: int  # N independent cluster scans
+    modeled_total_s: float
+    wall_s: float
+    cached_tenants: list[int] = field(default_factory=list)
+
+    @property
+    def amortization(self) -> float:
+        return self.naive_phase1_bytes / max(self.shared_phase1_bytes, 1)
+
+
+# ---------------------------------------------------------------------------
+# per-window split + global-order merge
+# ---------------------------------------------------------------------------
+
+
+def _split_windows(response: NodeResponse) -> dict[int, dict[str, np.ndarray]]:
+    """Split a shard's concatenated output into per-GLOBAL-window chunks.
+
+    The i-th entry of the node's window ledger corresponds to the i-th
+    ascending global window this shard owns (window-aligned shards keep
+    local and global window order identical).
+    """
+    result = response.result
+    rows = result.extras.get("window_rows")
+    if rows is None:
+        raise ValueError(
+            "node result lacks extras['window_rows'] — not a mergeable result"
+        )
+    if len(rows) != len(response.window_ids):
+        raise ValueError(
+            f"shard {response.shard_id}: ledger has {len(rows)} windows, "
+            f"shard owns {len(response.window_ids)}"
+        )
+    out_store = response.result.output
+    ks = np.array([k for _, _, k in rows], dtype=np.int64)
+    bounds = np.concatenate([[0], np.cumsum(ks)])
+    chunks: dict[int, dict[str, np.ndarray]] = {
+        w: {} for w in response.window_ids
+    }
+    flat_cache: dict[str, np.ndarray] = {}
+    for name, br in out_store.branches.items():
+        if br.jagged:
+            continue
+        arr = out_store.read_flat(name)
+        flat_cache[name] = arr
+        for i, w in enumerate(response.window_ids):
+            chunks[w][name] = arr[bounds[i] : bounds[i + 1]]
+    for name, br in out_store.branches.items():
+        if not br.jagged:
+            continue
+        values = out_store.read_jagged(name)[0]
+        counts = flat_cache[br.counts_branch].astype(np.int64)
+        voffsets = np.concatenate([[0], np.cumsum(counts)])
+        for i, w in enumerate(response.window_ids):
+            chunks[w][name] = values[
+                voffsets[bounds[i]] : voffsets[bounds[i + 1]]
+            ]
+    return chunks
+
+
+def merge_responses(
+    responses: list[NodeResponse],
+    basket_events: int,
+    codec: str,
+) -> tuple[EventStore, int, int]:
+    """Reassemble shard outputs in global window order.
+
+    Returns ``(output_store, n_input, n_passed)``.  The concatenation
+    order — per branch, per global window, survivors in window order —
+    is exactly the single-node executor's, and the store is rebuilt with
+    the same basketing and codec, so rows, counts, and output bytes are
+    bit-identical to the unsharded run.
+    """
+    template = max(
+        (r for r in responses if r.result.output.branches),
+        key=lambda r: r.result.output.n_events,
+        default=None,
+    )
+    if template is None:
+        raise ValueError("no shard produced an output schema")
+    out_branches = template.result.output.branches
+    jagged = {
+        n: b.counts_branch for n, b in out_branches.items() if b.jagged
+    }
+
+    per_window: dict[int, dict[str, np.ndarray]] = {}
+    for r in responses:
+        per_window.update(_split_windows(r))
+
+    order = sorted(per_window)
+    columns: dict[str, np.ndarray] = {}
+    for name, br in out_branches.items():
+        parts = [per_window[w][name] for w in order if name in per_window[w]]
+        columns[name] = (
+            np.concatenate(parts)
+            if parts
+            else np.empty(0, dtype=br.np_dtype())
+        )
+    merged = EventStore.from_arrays(
+        columns, jagged=jagged, basket_events=basket_events, codec=codec
+    )
+    n_input = sum(r.result.n_input for r in responses)
+    n_passed = sum(r.result.n_passed for r in responses)
+    return merged, n_input, n_passed
+
+
+# ---------------------------------------------------------------------------
+# the coordinator
+# ---------------------------------------------------------------------------
+
+
+class ClusterCoordinator:
+    """Scatter a query to N storage nodes, gather one merged result.
+
+    ``replicas`` maps shard_id -> a standby :class:`StorageNode` holding
+    the same shard; a primary that raises :class:`NodeFailure` is retried
+    there exactly once.  ``cache`` (optional) is consulted per
+    (query, shard manifest) before any node executes.
+    """
+
+    def __init__(
+        self,
+        nodes: list[StorageNode],
+        replicas: dict[int, StorageNode] | None = None,
+        cache: SkimResultCache | None = None,
+        concurrency: str = "serial",
+        basket_events: int | None = None,
+        codec: str | None = None,
+    ):
+        if not nodes:
+            raise ValueError("need at least one storage node")
+        if concurrency not in CONCURRENCY_MODES:
+            raise ValueError(
+                f"concurrency must be one of {CONCURRENCY_MODES}, "
+                f"got {concurrency!r}"
+            )
+        self.nodes = list(nodes)
+        self.replicas = dict(replicas or {})
+        self.cache = cache
+        self.concurrency = concurrency
+        ref = nodes[0].shard.store
+        self.basket_events = basket_events or ref.basket_events
+        self.codec = codec or ref.codec
+
+    # -- single query ---------------------------------------------------------
+
+    def _compile_once(self, query: Query | dict | str) -> tuple[Query, str]:
+        """Parse + compile the query once for the whole fan-out.
+
+        Works on a private copy of a caller-supplied ``Query`` so the
+        attached program can never go stale if the caller mutates and
+        reuses their object elsewhere."""
+        if isinstance(query, Query):
+            q = replace(query, meta=dict(query.meta))
+        else:
+            q = parse_query(query)
+        qh = query_hash(q)
+        from repro.kernels.predicate_eval import compile_query
+
+        # every node's planner picks this up instead of recompiling
+        # (SkimPlan.compiled_program checks the query's meta)
+        q.meta["_compiled_program"] = compile_query(q)
+        return q, qh
+
+    @staticmethod
+    def _hit_response(hit: NodeResponse, node: StorageNode) -> NodeResponse:
+        """Rebind a cached response to the serving node.  A hit pays only
+        output transfer; everything else (phase 1, decode, filter,
+        phase 2, write) is skipped."""
+        return replace(
+            hit,
+            node_id=node.node_id,
+            shard_id=node.shard.shard_id,
+            window_ids=list(node.shard.window_ids),
+            modeled_s=hit.result.breakdown.output_transfer,
+            straggle_s=0.0,
+            wall_s=0.0,
+            cached=True,
+        )
+
+    def _serve_shard(
+        self,
+        node: StorageNode,
+        query: Query,
+        qh: str,
+        retries: list[tuple[int, int, int]],
+    ) -> NodeResponse:
+        """Cache consult -> primary -> replica retry, for one shard."""
+        key = f"{qh}.{node.shard.manifest_hash}"
+        if self.cache is not None:
+            hit = self.cache.get(key)
+            if hit is not None:
+                return self._hit_response(hit, node)
+        try:
+            resp = node.execute(query)
+        except NodeFailure:
+            replica = self.replicas.get(node.shard.shard_id)
+            if replica is None:
+                raise ClusterError(
+                    f"shard {node.shard.shard_id}: primary node "
+                    f"{node.node_id} failed and no replica is configured"
+                ) from None
+            try:
+                resp = replica.execute(query)
+            except NodeFailure as exc:
+                raise ClusterError(
+                    f"shard {node.shard.shard_id}: primary and replica "
+                    "both failed"
+                ) from exc
+            retries.append(
+                (node.shard.shard_id, node.node_id, replica.node_id)
+            )
+        if self.cache is not None:
+            self.cache.put(
+                key,
+                resp,
+                nbytes=resp.result.extras.get(
+                    "output_bytes", resp.result.output.compressed_bytes()
+                ),
+                fetch_bytes=resp.result.stats.bytes_fetched,
+            )
+        return resp
+
+    def run(self, query: Query | dict | str) -> ClusterSkimResult:
+        t0 = time.perf_counter()
+        q, qh = self._compile_once(query)
+        retries: list[tuple[int, int, int]] = []
+
+        if self.concurrency == "threads":
+            with ThreadPoolExecutor(max_workers=len(self.nodes)) as ex:
+                futs = [
+                    ex.submit(self._serve_shard, node, q, qh, retries)
+                    for node in self.nodes
+                ]
+                responses = [f.result() for f in futs]
+        else:
+            responses = [
+                self._serve_shard(node, q, qh, retries) for node in self.nodes
+            ]
+
+        t_merge = time.perf_counter()
+        output, n_input, n_passed = merge_responses(
+            responses, self.basket_events, self.codec
+        )
+        merge_s = time.perf_counter() - t_merge
+
+        breakdown = Breakdown.merged([r.result.breakdown for r in responses])
+        stats = FetchStats.merged([r.result.stats for r in responses])
+        slowest = max((r.modeled_s for r in responses), default=0.0)
+        return ClusterSkimResult(
+            output=output,
+            n_input=n_input,
+            n_passed=n_passed,
+            breakdown=breakdown,
+            stats=stats,
+            responses=responses,
+            retries=retries,
+            modeled_total_s=slowest + merge_s,
+            merge_s=merge_s,
+            wall_s=time.perf_counter() - t0,
+            extras={
+                "output_bytes": output.compressed_bytes(),
+                "n_nodes": len(self.nodes),
+                "concurrency": self.concurrency,
+                "query_hash": qh,
+            },
+        )
+
+    # -- tenant batches (shared scan per node) --------------------------------
+
+    def run_batch(
+        self, queries: list[Query | dict | str]
+    ) -> ClusterBatchResult:
+        """Scatter a tenant batch: each node runs ONE shared scan for all
+        non-cached tenants; per-tenant results merge exactly like single
+        queries.  A tenant is served from cache only when *every* shard
+        hits (partial hits re-run with the batch — the shared pass is one
+        fetch either way)."""
+        t0 = time.perf_counter()
+        compiled = [self._compile_once(qdoc) for qdoc in queries]
+
+        cached_responses: dict[int, list[NodeResponse]] = {}
+        if self.cache is not None:
+            for ti, (q, qh) in enumerate(compiled):
+                keys = [
+                    f"{qh}.{node.shard.manifest_hash}" for node in self.nodes
+                ]
+                hits = self.cache.get_many(keys)  # atomic all-or-nothing
+                if hits is not None:
+                    cached_responses[ti] = [
+                        self._hit_response(hit, node)
+                        for hit, node in zip(hits, self.nodes)
+                    ]
+        live = [ti for ti in range(len(compiled)) if ti not in cached_responses]
+
+        batch_responses: list[BatchResponse] = []
+        retries: list[tuple[int, int, int]] = []
+        if live:
+            live_queries = [compiled[ti][0] for ti in live]
+
+            def scan(node: StorageNode) -> BatchResponse:
+                try:
+                    return node.execute_batch(live_queries)
+                except NodeFailure:
+                    replica = self.replicas.get(node.shard.shard_id)
+                    if replica is None:
+                        raise ClusterError(
+                            f"shard {node.shard.shard_id}: primary failed "
+                            "and no replica is configured"
+                        ) from None
+                    try:
+                        resp = replica.execute_batch(live_queries)
+                    except NodeFailure as exc:
+                        raise ClusterError(
+                            f"shard {node.shard.shard_id}: primary and "
+                            "replica both failed"
+                        ) from exc
+                    retries.append(
+                        (node.shard.shard_id, node.node_id, replica.node_id)
+                    )
+                    return resp
+
+            if self.concurrency == "threads":
+                with ThreadPoolExecutor(max_workers=len(self.nodes)) as ex:
+                    batch_responses = list(ex.map(scan, self.nodes))
+            else:
+                batch_responses = [scan(node) for node in self.nodes]
+
+            if self.cache is not None:
+                for br in batch_responses:
+                    for li, resp in enumerate(br.responses):
+                        _, qh = compiled[live[li]]
+                        node = next(
+                            n for n in self.nodes
+                            if n.shard.shard_id == br.shard_id
+                        )
+                        self.cache.put(
+                            f"{qh}.{node.shard.manifest_hash}",
+                            resp,
+                            nbytes=resp.result.extras.get("output_bytes", 0),
+                            fetch_bytes=resp.result.stats.bytes_fetched,
+                        )
+
+        results: list[ClusterSkimResult] = []
+        merge_s_total = 0.0
+        for ti in range(len(compiled)):
+            if ti in cached_responses:
+                responses = cached_responses[ti]
+            else:
+                li = live.index(ti)
+                responses = [br.responses[li] for br in batch_responses]
+            t_m = time.perf_counter()
+            output, n_input, n_passed = merge_responses(
+                responses, self.basket_events, self.codec
+            )
+            merge_s = time.perf_counter() - t_m
+            merge_s_total += merge_s
+            results.append(
+                ClusterSkimResult(
+                    output=output,
+                    n_input=n_input,
+                    n_passed=n_passed,
+                    breakdown=Breakdown.merged(
+                        [r.result.breakdown for r in responses]
+                    ),
+                    stats=FetchStats.merged(
+                        [r.result.stats for r in responses]
+                    ),
+                    responses=responses,
+                    retries=[r for r in retries],
+                    modeled_total_s=max(
+                        (r.modeled_s for r in responses), default=0.0
+                    )
+                    + merge_s,
+                    merge_s=merge_s,
+                    wall_s=0.0,
+                    extras={
+                        "output_bytes": output.compressed_bytes(),
+                        "tenant": ti,
+                        "query_hash": compiled[ti][1],
+                    },
+                )
+            )
+
+        shared_bytes = sum(
+            br.shared.shared_stats.bytes_fetched for br in batch_responses
+        )
+        naive_bytes = sum(
+            br.shared.naive_phase1_bytes for br in batch_responses
+        )
+        # cluster bound: the slowest live shared scan, or — fully warm —
+        # the slowest cached shard's output transfer (same currency as
+        # run()'s warm path)
+        slowest = max(
+            (br.modeled_s for br in batch_responses),
+            default=0.0,
+        )
+        slowest = max(
+            [slowest]
+            + [r.modeled_s for rs in cached_responses.values() for r in rs]
+        )
+        return ClusterBatchResult(
+            results=results,
+            shared_phase1_bytes=shared_bytes,
+            naive_phase1_bytes=naive_bytes,
+            modeled_total_s=slowest + merge_s_total,
+            wall_s=time.perf_counter() - t0,
+            cached_tenants=sorted(cached_responses),
+        )
+
+
+# ---------------------------------------------------------------------------
+# convenience builder
+# ---------------------------------------------------------------------------
+
+
+def build_cluster(
+    store: EventStore,
+    n_nodes: int,
+    policy: str = "round_robin",
+    window_events: int | None = None,
+    replication: bool = True,
+    cache: SkimResultCache | None = None,
+    concurrency: str = "serial",
+    **node_kw,
+) -> ClusterCoordinator:
+    """Partition ``store`` over ``n_nodes`` storage nodes and wire up a
+    coordinator.  ``replication=True`` places a standby replica node per
+    shard (sharing the shard's baskets — replication is free in-process);
+    ``node_kw`` passes link tiers / executor flags to every node."""
+    from repro.cluster.shard import partition_store
+
+    shards = partition_store(
+        store, n_nodes, policy=policy, window_events=window_events
+    )
+    nodes = [StorageNode(sh, **node_kw) for sh in shards]
+    replicas = (
+        {
+            sh.shard_id: StorageNode(
+                sh, node_id=n_nodes + sh.shard_id, **node_kw
+            )
+            for sh in shards
+        }
+        if replication
+        else {}
+    )
+    return ClusterCoordinator(
+        nodes,
+        replicas=replicas,
+        cache=cache,
+        concurrency=concurrency,
+        basket_events=store.basket_events,
+        codec=store.codec,
+    )

@@ -1,0 +1,192 @@
+"""Storage node: one shard behind a small request API (DESIGN.md §5b).
+
+A :class:`StorageNode` is the cluster's unit of placement and failure —
+the near-storage server (DPU analogue) that owns one shard and runs the
+PR-1 fast path against it: a per-shard
+:class:`~repro.core.engine.SkimEngine` for single queries and a
+:class:`~repro.serve.engine.SharedScanEngine` for multi-tenant batches.
+Its link tiers are its own (``near_input_link`` for the storage-side
+fetch the prefetcher hides, ``output_link`` for survivors crossing back
+to the client), so a cluster can model heterogeneous fleets.
+
+Failure realism is injectable and deterministic: ``inject_fault("fail")``
+makes the next request(s) raise :class:`NodeFailure` (the coordinator
+retries on a replica); ``inject_fault("straggle", delay_s=...)`` adds
+modeled seconds to the response so tail-latency behavior is visible in
+the cluster schedule without sleeping the host.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+from repro.cluster.shard import Shard
+from repro.core.engine import PCIE_128G, NetworkModel, SkimEngine, SkimResult, WAN_1G
+from repro.core.query import Query
+from repro.serve.engine import SharedScanEngine, SharedScanResult
+
+FAULT_KINDS = ("fail", "straggle")
+
+
+class NodeFailure(RuntimeError):
+    """A storage node refused or dropped a request (crash/timeout model)."""
+
+
+@dataclass
+class _Fault:
+    kind: str  # "fail" | "straggle"
+    remaining: int  # requests still affected
+    delay_s: float = 0.0
+
+
+@dataclass
+class NodeResponse:
+    """One shard's answer to one query."""
+
+    node_id: int
+    shard_id: int
+    window_ids: list[int]
+    result: SkimResult
+    modeled_s: float  # node-local modeled time (pipeline bound + straggle)
+    straggle_s: float = 0.0
+    wall_s: float = 0.0  # realized time on this host
+    cached: bool = False  # filled by the coordinator on cache hits
+
+
+@dataclass
+class BatchResponse:
+    """One shard's answer to a shared-scan tenant batch."""
+
+    node_id: int
+    shard_id: int
+    responses: list[NodeResponse]  # per tenant, request order
+    shared: SharedScanResult
+    modeled_s: float  # one shared phase 1 + all tenants' private work
+
+
+def modeled_node_seconds(result: SkimResult) -> float:
+    """The node's modeled wall-clock for one skim: the exact
+    double-buffered schedule when the executor pipelined, the serial
+    stage sum otherwise."""
+    return result.extras.get("pipeline_total", result.breakdown.total())
+
+
+class StorageNode:
+    """One shard + the engines that serve it."""
+
+    def __init__(
+        self,
+        shard: Shard,
+        node_id: int | None = None,
+        near_input_link: NetworkModel = PCIE_128G,
+        output_link: NetworkModel = WAN_1G,
+        fused: bool = True,
+        pipeline: bool | str = True,
+    ):
+        self.shard = shard
+        self.node_id = shard.shard_id if node_id is None else node_id
+        self.near_input_link = near_input_link
+        self.output_link = output_link
+        self.engine = SkimEngine(
+            shard.store,
+            input_link=output_link,
+            output_link=output_link,
+            chunk_events=shard.window_events,
+            fused=fused,
+            pipeline=pipeline,
+            near_input_link=near_input_link,
+        )
+        self.shared_engine = SharedScanEngine(
+            shard.store,
+            input_link=near_input_link,
+            output_link=output_link,
+            chunk_events=shard.window_events,
+            fused=fused,
+        )
+        self._faults: list[_Fault] = []
+        self.requests_served = 0
+
+    # -- fault injection -----------------------------------------------------
+
+    def inject_fault(self, kind: str, n: int = 1, delay_s: float = 0.0) -> None:
+        """Arm a deterministic fault for the next ``n`` requests."""
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} (want {FAULT_KINDS})")
+        self._faults.append(_Fault(kind, max(int(n), 1), delay_s))
+
+    def _consume_fault(self) -> float:
+        """Apply at most one armed fault; returns modeled straggle seconds."""
+        straggle = 0.0
+        for f in list(self._faults):
+            if f.remaining <= 0:
+                self._faults.remove(f)
+                continue
+            f.remaining -= 1
+            if f.remaining <= 0:
+                self._faults.remove(f)
+            if f.kind == "fail":
+                raise NodeFailure(
+                    f"node {self.node_id} (shard {self.shard.shard_id}): "
+                    "injected failure"
+                )
+            straggle += f.delay_s
+            break  # one fault per request
+        return straggle
+
+    # -- request API ---------------------------------------------------------
+
+    def execute(self, query: Query | dict | str) -> NodeResponse:
+        """Run one skim over this node's shard (near-data mode)."""
+        straggle = self._consume_fault()
+        t0 = time.perf_counter()
+        result = self.engine.run(query, mode="near_data")
+        self.requests_served += 1
+        return NodeResponse(
+            node_id=self.node_id,
+            shard_id=self.shard.shard_id,
+            window_ids=list(self.shard.window_ids),
+            result=result,
+            modeled_s=modeled_node_seconds(result) + straggle,
+            straggle_s=straggle,
+            wall_s=time.perf_counter() - t0,
+        )
+
+    def execute_batch(self, queries: list[Query | dict | str]) -> BatchResponse:
+        """Run a tenant batch as ONE shared scan over this node's shard."""
+        straggle = self._consume_fault()
+        t0 = time.perf_counter()
+        batch = self.shared_engine.run_batch(queries)
+        self.requests_served += 1
+        wall = time.perf_counter() - t0
+        responses = [
+            NodeResponse(
+                node_id=self.node_id,
+                shard_id=self.shard.shard_id,
+                window_ids=list(self.shard.window_ids),
+                result=r,
+                modeled_s=r.breakdown.total() + straggle,
+                straggle_s=straggle,
+                wall_s=wall,
+            )
+            for r in batch.results
+        ]
+        modeled = (
+            batch.shared_breakdown.total()
+            + sum(r.breakdown.total() for r in batch.results)
+            + straggle
+        )
+        return BatchResponse(
+            node_id=self.node_id,
+            shard_id=self.shard.shard_id,
+            responses=responses,
+            shared=batch,
+            modeled_s=modeled,
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        return (
+            f"StorageNode(id={self.node_id}, shard={self.shard.shard_id}, "
+            f"windows={len(self.shard.window_ids)}, "
+            f"events={self.shard.n_events})"
+        )

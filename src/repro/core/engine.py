@@ -106,6 +106,15 @@ class Breakdown:
         self.write += other.write
         self.output_transfer += other.output_transfer
 
+    @classmethod
+    def merged(cls, parts: "list[Breakdown]") -> "Breakdown":
+        """Sum a sequence of breakdowns into a fresh object (the cluster
+        coordinator's gather contract — inputs are left untouched)."""
+        out = cls()
+        for p in parts:
+            out.merge(p)
+        return out
+
 
 @dataclass
 class SkimResult:
@@ -494,6 +503,10 @@ class SkimEngine:
                 for start in range(0, n, chunk):
                     yield start, min(start + chunk, n), None
 
+        # per-window survivor ledger: (start, stop, n_passed) for EVERY
+        # window, survivors or not — the mergeable-result contract the
+        # cluster coordinator splits shard outputs with (DESIGN.md §5)
+        window_rows: list[tuple[int, int, int]] = []
         t_phase = time.perf_counter()
         pad_K = 0  # grows monotonically so padded shapes (and compiled
         # kernels) stay stable across windows once the max multiplicity
@@ -552,6 +565,7 @@ class SkimEngine:
                         mask &= eval_stage(stage, loaded, m)
 
             k = int(mask.sum())
+            window_rows.append((start, stop, k))
             if k:
                 n_passed += k
                 # ---- phase 2: output-only branches, survivors only ----
@@ -601,6 +615,7 @@ class SkimEngine:
             "fused": fused,
             "pipelined": bool(prefetch),
             "phase_wall_s": phase_wall,
+            "window_rows": window_rows,
         }
         if win_records:
             # exact double-buffered schedule from the per-window records

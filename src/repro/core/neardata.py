@@ -1,4 +1,4 @@
-"""Near-data skimming on the accelerator mesh (DESIGN.md §2, §5).
+"""Near-data skimming on the accelerator mesh (DESIGN.md §2, §6).
 
 The paper's placement insight — filter where the bytes live, ship only
 survivors — mapped to a JAX mesh: events are sharded over the ``data``
@@ -77,7 +77,7 @@ def build_padded_inputs(
     payload: after stream compaction the survivor rows carry their own
     source indices, so the host can reconstruct the boolean mask from the
     compacted output alone — the mask itself never has to leave the device
-    (DESIGN.md §6).  float32 holds indices exactly up to 2**24 events,
+    (DESIGN.md §7).  float32 holds indices exactly up to 2**24 events,
     far above any window size.
     """
     flat_names = [n for n in data if not (store.branches.get(n) and store.branches[n].jagged)]

@@ -34,7 +34,11 @@ class SkimPlan:
 
     def compiled_program(self):
         """Device predicate program, compiled once per skim (lazy — host-only
-        paths never pull in the kernel stack)."""
+        paths never pull in the kernel stack).  A program attached to the
+        query's ``meta`` (the cluster coordinator's compile-once fan-out,
+        DESIGN.md §5b) short-circuits per-plan compilation."""
+        if self._program is None:
+            self._program = self.query.meta.get("_compiled_program")
         if self._program is None:
             from repro.kernels.predicate_eval import compile_query
 

@@ -3,7 +3,7 @@
 The paper's storage layer compresses ROOT baskets with LZMA (small, slow) or
 LZ4 (larger, fast) and offloads decompression to the BlueField-3 engine.
 
-TPU adaptation (DESIGN.md §2/§6): LZ4's byte-granular match-copy loop is
+TPU adaptation (DESIGN.md §2/§7): LZ4's byte-granular match-copy loop is
 serial and does not map onto the TPU VPU.  We keep the *role* of each codec:
 
   - ``zlib``    : the LZMA stand-in — high ratio, expensive CPU decode.

@@ -73,6 +73,15 @@ class FetchStats:
         for k, v in other.by_branch.items():
             self.by_branch[k] = self.by_branch.get(k, 0) + v
 
+    @classmethod
+    def merged(cls, parts: "list[FetchStats]") -> "FetchStats":
+        """Sum a sequence of stats into a fresh object (the scatter-gather
+        coordinator's gather contract — inputs are left untouched)."""
+        out = cls()
+        for p in parts:
+            out.merge(p)
+        return out
+
 
 class WindowPrefetcher:
     """Double-buffered basket-window loader (DESIGN.md §4).
@@ -259,6 +268,69 @@ class EventStore:
     def raw_bytes(self, names=None) -> int:
         names = names if names is not None else self.branch_names()
         return sum(m.raw_bytes for n in names for m in self._baskets[n])
+
+    def manifest(self) -> dict:
+        """Canonical description of the store's physical layout: branch
+        schemas plus every basket's placement and size.  Two stores holding
+        byte-identical baskets produce equal manifests, which is what makes
+        the manifest hash usable as a content address for skim results
+        (DESIGN.md §5)."""
+        return {
+            "n_events": self.n_events,
+            "basket_events": self.basket_events,
+            "codec": self.codec,
+            "branches": {
+                n: [b.dtype, b.jagged, b.counts_branch]
+                for n, b in sorted(self.branches.items())
+            },
+            "baskets": {
+                n: [
+                    [m.first_entry, m.n_entries, m.n_values, m.comp_bytes, m.raw_bytes]
+                    for m in self._baskets[n]
+                ]
+                for n in sorted(self._baskets)
+            },
+        }
+
+    def manifest_hash(self) -> str:
+        """SHA-256 of the canonical manifest (hex)."""
+        import hashlib
+
+        doc = json.dumps(self.manifest(), sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(doc.encode()).hexdigest()
+
+    def slice_events(self, spans: "list[tuple[int, int]]") -> "EventStore":
+        """Build a new store holding the concatenation of event ranges.
+
+        ``spans`` is a list of half-open ``[start, stop)`` event ranges,
+        taken in the given order.  The result re-baskets with this store's
+        ``basket_events``/``codec``, so when every span is basket-aligned
+        the sliced baskets are byte-identical to the originals — the
+        property the cluster shard layer relies on (DESIGN.md §5).
+        """
+        columns: dict[str, np.ndarray] = {}
+        jagged: dict[str, str] = {}
+        for name, br in self.branches.items():
+            if br.jagged:
+                jagged[name] = br.counts_branch
+                parts = [self.read_jagged(name, a, b)[0] for a, b in spans]
+            else:
+                parts = [self.read_flat(name, a, b) for a, b in spans]
+            columns[name] = (
+                np.concatenate(parts) if parts else np.empty(0, dtype=br.np_dtype())
+            )
+        store = EventStore(basket_events=self.basket_events, codec=self.codec)
+        flat = [n for n in columns if n not in jagged]
+        store.n_events = int(sum(b - a for a, b in spans))
+        for name in flat:
+            arr = np.asarray(columns[name])
+            if len(arr) != store.n_events:
+                raise ValueError(f"branch {name}: length mismatch in slice")
+            store._add_flat(name, arr)
+        for name, counts_name in jagged.items():
+            counts = np.asarray(columns[counts_name]).astype(np.int32)
+            store._add_jagged(name, np.asarray(columns[name]), counts, counts_name)
+        return store
 
     # -- basket access ------------------------------------------------------
 

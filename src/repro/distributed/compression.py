@@ -1,6 +1,6 @@
 """Gradient compression for the bandwidth-scarce pod (DCN) axis.
 
-Two composable pieces (DESIGN.md §5):
+Two composable pieces (DESIGN.md §6):
 
   * **error-feedback int8 quantization** — per-tensor symmetric scale;
     the quantization residual is fed back into the next step's gradient

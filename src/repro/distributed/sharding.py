@@ -1,6 +1,6 @@
 """Named-axis sharding rules for the (pod, data, model) production mesh.
 
-Strategy (DESIGN.md §5):
+Strategy (DESIGN.md §6):
   * tensor parallelism over ``model``: column-parallel in-projections
     (attention qkv, FFN up/gate, expert dim for MoE), row-parallel
     out-projections; big embeddings sharded on the vocab dim,

@@ -1,4 +1,4 @@
-"""Fused predicate-eval + stream-compact kernel (beyond-paper; DESIGN.md §6).
+"""Fused predicate-eval + stream-compact kernel (beyond-paper; DESIGN.md §7).
 
 The paper evaluates the predicate, then gathers survivors — two passes
 over the event data.  On TPU both fit in one VMEM round trip: each event

@@ -4,7 +4,7 @@ TPU adaptation: compaction is a data-dependent permutation, which the VPU
 cannot scatter directly.  Instead each event tile builds a one-hot
 permutation matrix from the exclusive prefix-sum of the survivor mask and
 *matmuls* the payload through it — turning an irregular gather into an MXU
-operation (DESIGN.md §6).  Tiles are then stitched by a small jnp scan
+operation (DESIGN.md §7).  Tiles are then stitched by a small jnp scan
 using the per-tile counts.
 
 Two-pass structure:

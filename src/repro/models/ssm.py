@@ -3,7 +3,7 @@
 Train path: chunked associative scan — outer ``lax.scan`` carries the
 (B, d_inner, d_state) SSM state across sequence chunks; within a chunk the
 recurrence h_t = a_t * h_{t-1} + b_t runs as a parallel associative scan.
-This bounds the live (B, Lc, d_inner, d_state) tensor (DESIGN.md §5).
+This bounds the live (B, Lc, d_inner, d_state) tensor (DESIGN.md §6).
 
 Decode path: single-step recurrence on (ssm state, conv ring buffer) —
 O(1) per token, which is what makes ``long_500k`` run for SSM/hybrid archs.

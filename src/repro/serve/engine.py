@@ -144,6 +144,9 @@ class SharedScanEngine:
         jagged_maps: list[dict[str, str]] = [{} for _ in plans]
         n_passed = [0] * len(plans)
         pad_K = [0] * len(plans)  # monotonic per-query pad shapes
+        # per-tenant (start, stop, k) ledger — same mergeable-result
+        # contract as the single-query executor (DESIGN.md §5)
+        window_rows: list[list[tuple[int, int, int]]] = [[] for _ in plans]
 
         src = WindowPrefetcher(
             n, chunk, load_window, enabled=(self.pipeline == "threads")
@@ -177,6 +180,7 @@ class SharedScanEngine:
                             if stage and mask.any():
                                 mask &= eval_stage(stage, data, m)
                 k = int(mask.sum())
+                window_rows[i].append((start, stop, k))
                 if k == 0:
                     continue
                 n_passed[i] += k
@@ -211,6 +215,7 @@ class SharedScanEngine:
                         "fused": self.fused,
                         "pipelined": self.pipeline == "threads",
                         "shared_scan": True,
+                        "window_rows": window_rows[i],
                     },
                 )
             )

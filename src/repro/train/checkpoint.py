@@ -4,7 +4,7 @@ Layout: ``<dir>/step_<N>/shard_<k>.npz`` + ``meta.json``.  Each leaf is
 saved as host numpy keyed by its flattened tree path; on restore the
 arrays are ``device_put`` against the *current* mesh's shardings — the
 restoring job may run on a different mesh shape (512 -> 256 chips, etc.),
-which is the elastic-scaling path (DESIGN.md §5).
+which is the elastic-scaling path (DESIGN.md §6).
 
 Fault model: writes go to a temp dir and are atomically renamed, so a
 job killed mid-checkpoint never corrupts the latest complete step; on

@@ -1,0 +1,333 @@
+"""Distributed skim cluster: sharding, scatter-gather merge, cache.
+
+Pins the tentpole invariant (ISSUE 2 / DESIGN.md §5): for any node
+count and shard policy, the merged cluster output — rows, counts,
+output bytes — is bit-identical to the single-node ``run_skim`` result,
+including with an injected node failure (replica retry), with a warm
+result cache, and under threaded scatter.  Cluster byte accounting
+(fetched bytes AND request counts) equals the single-node run's.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterCoordinator,
+    ClusterError,
+    SkimResultCache,
+    StorageNode,
+    build_cluster,
+    canonical_query,
+    partition_store,
+    query_hash,
+)
+from repro.cluster.shard import ShardMap, assign_windows, window_spans
+from repro.core.engine import run_skim
+from repro.data.synth import make_nanoaod_like
+from tests.test_query import QUERY
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_nanoaod_like(10_000, n_hlt=16, n_filler=8, basket_events=2048)
+
+
+@pytest.fixture(scope="module")
+def reference(store):
+    return run_skim(store, QUERY, mode="near_data")
+
+
+@pytest.fixture(scope="module")
+def shards3(store):
+    return partition_store(store, 3)
+
+
+def _coord(shards, store, cache=None, replication=True, concurrency="serial"):
+    nodes = [StorageNode(sh) for sh in shards]
+    replicas = (
+        {sh.shard_id: StorageNode(sh, node_id=100 + sh.shard_id) for sh in shards}
+        if replication
+        else {}
+    )
+    return ClusterCoordinator(
+        nodes,
+        replicas=replicas,
+        cache=cache,
+        concurrency=concurrency,
+        basket_events=store.basket_events,
+        codec=store.codec,
+    )
+
+
+def _assert_same_output(res, ref):
+    """rows, counts, output bytes — the bit-identity acceptance contract."""
+    assert res.n_passed == ref.n_passed
+    assert res.n_input == ref.n_input
+    assert res.output.compressed_bytes() == ref.output.compressed_bytes()
+    for name in ref.output.branch_names():
+        br = ref.output.branches[name]
+        if br.jagged:
+            v0, c0 = ref.output.read_jagged(name)
+            v1, c1 = res.output.read_jagged(name)
+            np.testing.assert_array_equal(c1, c0)
+            np.testing.assert_array_equal(v1, v0)
+        else:
+            np.testing.assert_array_equal(
+                res.output.read_flat(name), ref.output.read_flat(name)
+            )
+
+
+# ---------------------------------------------------------------------------
+# the cluster correctness invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "size_balanced"])
+@pytest.mark.parametrize("n_nodes", [1, 2, 5])
+def test_cluster_bit_identical_to_single_node(store, reference, n_nodes, policy):
+    coord = build_cluster(store, n_nodes, policy=policy, replication=False)
+    res = coord.run(QUERY)
+    _assert_same_output(res, reference)
+    # aligned shards ⇒ the cluster moved exactly the single node's bytes
+    assert res.stats.bytes_fetched == reference.stats.bytes_fetched
+    assert res.stats.requests == reference.stats.requests
+    assert res.modeled_total_s > 0
+
+
+def test_more_nodes_than_windows(reference, store):
+    """Empty shards are legal: 10k events / 2048-event windows = 5 windows
+    spread over 7 nodes leaves two nodes empty."""
+    coord = build_cluster(store, 7, replication=False)
+    assert sum(not n.shard.window_ids for n in coord.nodes) == 2
+    _assert_same_output(coord.run(QUERY), reference)
+
+
+def test_threads_concurrency_matches_serial(store, shards3, reference):
+    res = _coord(shards3, store, concurrency="threads").run(QUERY)
+    _assert_same_output(res, reference)
+
+
+def test_failed_node_retries_on_replica(store, shards3, reference):
+    coord = _coord(shards3, store)
+    coord.nodes[1].inject_fault("fail")
+    res = coord.run(QUERY)
+    _assert_same_output(res, reference)
+    assert res.retries == [(1, coord.nodes[1].node_id, 101)]
+
+
+def test_failure_without_replica_raises(store, shards3):
+    coord = _coord(shards3, store, replication=False)
+    coord.nodes[0].inject_fault("fail")
+    with pytest.raises(ClusterError, match="no replica"):
+        coord.run(QUERY)
+
+
+def test_primary_and_replica_failure_raises(store, shards3):
+    coord = _coord(shards3, store)
+    coord.nodes[2].inject_fault("fail")
+    coord.replicas[2].inject_fault("fail")
+    with pytest.raises(ClusterError, match="both failed"):
+        coord.run(QUERY)
+
+
+def test_straggler_stretches_modeled_makespan(store, shards3):
+    coord = _coord(shards3, store)
+    base = coord.run(QUERY)
+    coord.nodes[0].inject_fault("straggle", delay_s=5.0)
+    slow = coord.run(QUERY)
+    assert slow.responses[0].straggle_s == 5.0
+    assert slow.modeled_total_s > base.modeled_total_s + 4.0
+    # straggling is a schedule property, not a data property
+    assert slow.n_passed == base.n_passed
+
+
+def test_warm_cache_bit_identical_and_skips_execution(store, shards3, reference):
+    cache = SkimResultCache(budget_bytes=32 << 20)
+    coord = _coord(shards3, store, cache=cache)
+    cold = coord.run(QUERY)
+    assert cold.cache_hits == 0
+    served = [n.requests_served for n in coord.nodes]
+    warm = coord.run(QUERY)
+    _assert_same_output(warm, reference)
+    assert warm.cache_hits == len(coord.nodes)
+    # no node executed anything on the warm run
+    assert [n.requests_served for n in coord.nodes] == served
+    assert cache.stats.hits == len(coord.nodes)
+    assert cache.stats.saved_fetch_bytes == cold.stats.bytes_fetched
+    # a warm run only pays output transfer + merge
+    assert warm.modeled_total_s < cold.modeled_total_s
+
+
+def test_warm_cache_with_failure_never_touches_nodes(store, shards3, reference):
+    """A dead primary behind a warm cache is invisible."""
+    cache = SkimResultCache()
+    coord = _coord(shards3, store, cache=cache, replication=False)
+    coord.run(QUERY)
+    coord.nodes[0].inject_fault("fail", n=100)
+    _assert_same_output(coord.run(QUERY), reference)
+
+
+def test_run_does_not_mutate_caller_query(store, shards3):
+    """The coordinator compiles into a private copy: a caller-held Query
+    stays clean, so later edits to it are never shadowed by a stale
+    attached program."""
+    from repro.core.query import parse_query
+
+    q = parse_query(QUERY)
+    _coord(shards3, store).run(q)
+    assert "_compiled_program" not in q.meta
+
+
+def test_batch_primary_and_replica_failure_raises(store, shards3):
+    coord = _coord(shards3, store)
+    coord.nodes[1].inject_fault("fail")
+    coord.replicas[1].inject_fault("fail")
+    with pytest.raises(ClusterError, match="both failed"):
+        coord.run_batch([QUERY])
+
+
+def test_batch_failed_node_retries_on_replica(store, shards3, reference):
+    coord = _coord(shards3, store)
+    coord.nodes[0].inject_fault("fail")
+    batch = coord.run_batch([QUERY])
+    _assert_same_output(batch.results[0], reference)
+    assert batch.results[0].retries == [(0, coord.nodes[0].node_id, 100)]
+
+
+def test_cache_get_many_all_or_nothing():
+    cache = SkimResultCache(budget_bytes=100)
+    cache.put("a", "A", nbytes=10, fetch_bytes=5)
+    cache.put("b", "B", nbytes=10, fetch_bytes=5)
+    assert cache.get_many(["a", "b"]) == ["A", "B"]
+    assert cache.stats.hits == 2
+    assert cache.get_many(["a", "missing"]) is None
+    assert cache.stats.hits == 2  # partial probe accounts no hit
+    assert cache.stats.misses == 1
+    assert cache.stats.saved_fetch_bytes == 10
+
+
+def test_cluster_batch_matches_solo_runs(store, shards3, reference):
+    other = {
+        "branches": ["Muon_*", "MET_*"],
+        "selection": {
+            "preselection": [{"branch": "MET_pt", "op": ">", "value": 25.0}],
+            "object": [{"collection": "Muon",
+                        "cuts": [{"var": "pt", "op": ">", "value": 15.0}]}],
+        },
+    }
+    cache = SkimResultCache()
+    coord = _coord(shards3, store, cache=cache)
+    batch = coord.run_batch([QUERY, other])
+    _assert_same_output(batch.results[0], reference)
+    _assert_same_output(batch.results[1], run_skim(store, other, mode="near_data"))
+    assert batch.shared_phase1_bytes < batch.naive_phase1_bytes
+    assert batch.amortization > 1.0
+    # second batch: every (tenant, shard) is cached
+    warm = coord.run_batch([QUERY, other])
+    assert warm.cached_tenants == [0, 1]
+    _assert_same_output(warm.results[0], reference)
+    # a warm batch still models the cached shards' output transfer
+    assert warm.modeled_total_s > max(
+        r.modeled_s for res in warm.results for r in res.responses
+    ) > 0
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+
+def test_assignment_policies_cover_all_windows_once():
+    for policy, sizes in (("round_robin", None), ("size_balanced", [5, 1, 9, 3, 7])):
+        got = assign_windows(5, 2, policy, sizes)
+        flat = sorted(w for shard in got for w in shard)
+        assert flat == [0, 1, 2, 3, 4]
+        for shard in got:
+            assert shard == sorted(shard)
+
+
+def test_size_balanced_beats_round_robin_on_skew():
+    sizes = [100, 1, 1, 1, 100, 1, 1, 1]  # round_robin piles both on shard 0
+    rr = assign_windows(8, 2, "round_robin")
+    sb = assign_windows(8, 2, "size_balanced", sizes)
+    load = lambda a: [sum(sizes[w] for w in sh) for sh in a]  # noqa: E731
+    assert max(load(sb)) < max(load(rr))
+
+
+def test_partition_rejects_bad_inputs(store):
+    with pytest.raises(ValueError, match="policy"):
+        partition_store(store, 2, policy="hash")
+    with pytest.raises(ValueError, match="multiple"):
+        partition_store(store, 2, window_events=store.basket_events + 1)
+    with pytest.raises(ValueError, match="n_shards"):
+        assign_windows(4, 0)
+
+
+def test_shard_map_validates_ownership(shards3, store):
+    smap = ShardMap.build(shards3, store.n_events)
+    assert sorted(smap.owner) == list(range(len(window_spans(store.n_events, 2048))))
+    with pytest.raises(ValueError, match="owned by two"):
+        ShardMap.build([shards3[0], shards3[0]], store.n_events)
+
+
+def test_shard_manifest_hashes(store, shards3):
+    hashes = [sh.manifest_hash for sh in shards3]
+    assert len(set(hashes)) == len(hashes)  # distinct content ⇒ distinct address
+    again = partition_store(store, 3)
+    assert [sh.manifest_hash for sh in again] == hashes  # deterministic
+    assert all(sh.comp_bytes > 0 for sh in shards3)
+
+
+def test_sliced_shards_preserve_bytes(store, shards3):
+    """Window-aligned slicing re-encodes to byte-identical baskets."""
+    assert sum(sh.store.compressed_bytes() for sh in shards3) == (
+        store.compressed_bytes()
+    )
+    assert sum(sh.n_events for sh in shards3) == store.n_events
+
+
+# ---------------------------------------------------------------------------
+# cache + canonical query form
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_query_normalizes_commutative_order():
+    a = {"branches": ["MET_*"], "selection": {
+        "event": [
+            {"type": "any", "branches": ["HLT_IsoMu24", "HLT_Ele32_WPTight_Gsf"]},
+            {"type": "cut", "branch": "MET_pt", "op": ">", "value": 40.0},
+        ]}}
+    b = {"branches": ["MET_*"], "selection": {
+        "event": [
+            {"type": "cut", "branch": "MET_pt", "op": ">", "value": 40.0},
+            {"type": "any", "branches": ["HLT_Ele32_WPTight_Gsf", "HLT_IsoMu24"]},
+        ]}}
+    assert canonical_query(a) == canonical_query(b)
+    assert query_hash(a) == query_hash(b)
+    c = {"branches": ["MET_*"], "selection": {
+        "event": [{"type": "cut", "branch": "MET_pt", "op": ">", "value": 41.0}]}}
+    assert query_hash(c) != query_hash(a)
+    # output patterns are part of the contract: order matters
+    d = {"branches": ["Muon_*", "MET_*"], "selection": {}}
+    e = {"branches": ["MET_*", "Muon_*"], "selection": {}}
+    assert query_hash(d) != query_hash(e)
+
+
+def test_cache_lru_eviction_and_accounting():
+    cache = SkimResultCache(budget_bytes=100)
+    assert cache.put("a", "A", nbytes=40, fetch_bytes=400)
+    assert cache.put("b", "B", nbytes=40, fetch_bytes=400)
+    assert cache.get("a") == "A"  # refresh a; b is now LRU
+    assert cache.put("c", "C", nbytes=40)  # evicts b
+    assert cache.get("b") is None
+    assert cache.get("a") == "A" and cache.get("c") == "C"
+    assert cache.stats.evictions == 1
+    assert cache.stats.stored_bytes == 80
+    assert cache.stats.hits == 3 and cache.stats.misses == 1
+    assert cache.stats.hit_bytes == 120
+    assert cache.stats.saved_fetch_bytes == 800
+    assert not cache.put("huge", "X", nbytes=101)  # over the whole budget
+    assert cache.contains("a") and not cache.contains("huge")
+    assert 0 < cache.stats.hit_rate < 1
+    cache.clear()
+    assert len(cache) == 0 and cache.stats.stored_bytes == 0

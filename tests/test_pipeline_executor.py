@@ -158,6 +158,63 @@ def test_pipeline_makespan_bounded(store):
     assert pipe > 0
 
 
+def test_window_prefetcher_zero_event_dataset():
+    """A zero-window dataset yields nothing, threaded or serial, and never
+    invokes the loader."""
+    calls = []
+    for enabled in (False, True):
+        pf = WindowPrefetcher(0, 1024, lambda s, e: calls.append((s, e)),
+                              enabled=enabled)
+        assert pf.windows() == []
+        assert list(pf) == []
+    assert calls == []
+
+
+def test_window_prefetcher_single_window():
+    for enabled in (False, True):
+        got = list(WindowPrefetcher(100, 1024, lambda s, e: (s, e),
+                                    enabled=enabled))
+        assert got == [(0, 100, (0, 100))]
+
+
+def test_window_prefetcher_depth_exceeds_window_count():
+    """depth > #windows must not duplicate, drop, or reorder windows."""
+    loads = []
+
+    def load(start, stop):
+        loads.append((start, stop))
+        return start
+
+    got = list(WindowPrefetcher(5_000, 2_000, load, depth=16, enabled=True))
+    assert [(s, e) for s, e, _ in got] == [(0, 2000), (2000, 4000), (4000, 5000)]
+    assert [p for _, _, p in got] == [0, 2000, 4000]
+    assert sorted(loads) == [(0, 2000), (2000, 4000), (4000, 5000)]
+
+
+@pytest.mark.parametrize("enabled", [False, True])
+def test_window_prefetcher_worker_exception_propagates(enabled):
+    """A loader crash surfaces to the consumer (not swallowed in the
+    worker thread), whichever schedule runs it."""
+
+    def load(start, stop):
+        if start >= 4_000:
+            raise RuntimeError("basket decode blew up")
+        return start
+
+    pf = WindowPrefetcher(10_000, 2_000, load, enabled=enabled)
+    got = []
+    with pytest.raises(RuntimeError, match="basket decode blew up"):
+        for start, _, payload in pf:
+            got.append(start)
+    # the windows before the crash were delivered in order
+    assert got == [0, 2000]
+
+
+def test_window_prefetcher_rejects_bad_window_size():
+    with pytest.raises(ValueError, match="window_events"):
+        WindowPrefetcher(100, 0, lambda s, e: None)
+
+
 def test_window_prefetcher_order_and_coverage():
     """The prefetcher yields every window exactly once, in order, with
     identical payloads whether threaded or serial."""

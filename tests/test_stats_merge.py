@@ -1,0 +1,69 @@
+"""FetchStats / Breakdown merge helpers — the coordinator's gather math.
+
+The scatter-gather coordinator sums per-shard accounting with
+``FetchStats.merged`` / ``Breakdown.merged``; these pin the exact field
+semantics (every field sums, by-branch maps union-sum, inputs are never
+mutated, and the empty merge is the zero object).
+"""
+
+import pytest
+
+from repro.core.engine import Breakdown
+from repro.data.store import FetchStats
+
+
+def _stats(nbytes, reqs, branch, bbytes):
+    s = FetchStats()
+    s.record(branch, bbytes, n_requests=reqs)
+    s.bytes_fetched = nbytes  # decouple total from the single record
+    return s
+
+
+def test_fetchstats_merge_sums_fields_and_branches():
+    a = FetchStats()
+    a.record("Jet_pt", 100, n_requests=2)
+    b = FetchStats()
+    b.record("Jet_pt", 50)
+    b.record("MET_pt", 7, n_requests=3)
+    a.merge(b)
+    assert a.bytes_fetched == 157
+    assert a.requests == 6
+    assert a.by_branch == {"Jet_pt": 150, "MET_pt": 7}
+
+
+def test_fetchstats_merged_is_pure():
+    parts = [_stats(10, 1, "a", 10), _stats(20, 2, "b", 20), _stats(5, 1, "a", 5)]
+    out = FetchStats.merged(parts)
+    assert out.bytes_fetched == 35
+    assert out.requests == 4
+    assert out.by_branch == {"a": 15, "b": 20}
+    # inputs untouched
+    assert [p.bytes_fetched for p in parts] == [10, 20, 5]
+    assert parts[0].by_branch == {"a": 10}
+    # fresh object, not an alias
+    assert out is not parts[0]
+    assert FetchStats.merged([]).bytes_fetched == 0
+
+
+def test_breakdown_merge_accumulates_every_stage():
+    a = Breakdown(fetch=1.0, decompress=2.0, deserialize=3.0,
+                  filter=4.0, write=5.0, output_transfer=6.0)
+    b = Breakdown(fetch=0.5, decompress=0.5, deserialize=0.5,
+                  filter=0.5, write=0.5, output_transfer=0.5)
+    a.merge(b)
+    assert a.as_dict() == {
+        "fetch": 1.5, "decompress": 2.5, "deserialize": 3.5,
+        "filter": 4.5, "write": 5.5, "output_transfer": 6.5,
+        "total": pytest.approx(24.0),
+    }
+
+
+def test_breakdown_merged_is_pure():
+    parts = [Breakdown(fetch=1.0), Breakdown(filter=2.0), Breakdown(write=3.0)]
+    out = Breakdown.merged(parts)
+    assert out.total() == pytest.approx(6.0)
+    assert parts[0].total() == pytest.approx(1.0)  # untouched
+    assert Breakdown.merged([]).total() == 0.0
+    # merged-of-merged == flat merge (associativity)
+    nested = Breakdown.merged([Breakdown.merged(parts[:2]), parts[2]])
+    assert nested.as_dict() == out.as_dict()
