@@ -52,7 +52,10 @@ def _modeled_total(res) -> float:
 def run(smoke: bool = False) -> dict:
     if smoke:
         common.N_EVENTS = min(common.N_EVENTS, 20_000)
-    repeats = 1 if smoke else REPEATS
+    # best-of-N even in smoke: the configs differ by a few ms of measured
+    # compute and this container's shared cores are throttle-y — a single
+    # run per config is too noisy for the ordering assertion
+    repeats = REPEATS
     store = get_store("bitpack")
     engine = SkimEngine(store, input_link=WAN_1G, near_input_link=LOCAL_DISK)
     # warm the caches (jit for the device backends, page cache for numpy)

@@ -1,0 +1,198 @@
+"""Zone-map predicate pushdown: pruned vs reference executor (DESIGN.md §9).
+
+Three queries over the shared benchmark store, each run through the
+default ``near_data`` executor with ``prune=True`` and with the
+``prune=False`` reference:
+
+  * ``selective``     — a run-range style skim (``luminosityBlock`` cut,
+    ~5% selectivity) on a monotonically-recorded branch: most basket
+    windows are provably empty from their stats, so phase 1 *and*
+    phase 2 never touch them.  The paper's "fastest byte is the one
+    never moved", now applied before any byte moves.
+  * ``accept_all``    — a 100%-selectivity skim (``MET_pt`` floor below
+    the generator's minimum): every window is provably all-surviving, so
+    predicate fetch+eval is skipped and the output set moves in one
+    phase-2 round per window.
+  * ``undecidable``   — a median ``MET_pt`` cut whose per-basket stats
+    prove nothing: the pruned run must degrade to the reference scan
+    with no accounting drift (the ≤1% overhead guard).
+
+Reported per query: modeled end-to-end seconds (pipeline bound), phase-1
+fetched bytes, and skipped bytes/requests.  Asserted (the acceptance
+contract): identical survivor counts everywhere; on ``selective`` the
+pruned run moves ≥2x fewer bytes AND is modeled-faster; on the
+100%-selectivity and undecidable queries pruned modeled time is within
+1% of the reference.
+
+The near-storage input is modeled at the SSD tier (LOCAL_DISK), the
+fetch pruning actually avoids.  ``--smoke`` shrinks the store for CI.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import common
+from benchmarks.common import csv_row
+from repro.core.engine import LOCAL_DISK, SkimEngine, WAN_1G
+
+REPEATS = 5
+
+
+def _queries(n_events: int) -> dict[str, dict]:
+    # ~5% of luminosity blocks (1000 events each in the synthetic store)
+    lumi_cut = max((n_events // 1000) // 20 - 1, 0)
+    base_branches = ["Electron_*", "MET_*", "HLT_*",
+                     "run", "event", "luminosityBlock"]
+    return {
+        "selective": {
+            "branches": base_branches,
+            "selection": {
+                "preselection": [
+                    {"branch": "luminosityBlock", "op": "<=", "value": lumi_cut}
+                ],
+                "event": [
+                    {"type": "cut", "branch": "MET_pt", "op": ">", "value": 25.0}
+                ],
+            },
+        },
+        "accept_all": {
+            "branches": base_branches,
+            "selection": {
+                "preselection": [
+                    # synthetic MET_pt is exponential(30) + 1.0 >= 1.0
+                    {"branch": "MET_pt", "op": ">", "value": 0.5}
+                ],
+            },
+        },
+        "undecidable": {
+            "branches": base_branches,
+            "selection": {
+                "preselection": [
+                    # near the MET median: stats can prove nothing
+                    {"branch": "MET_pt", "op": ">", "value": 21.0}
+                ],
+            },
+        },
+    }
+
+
+def _modeled_total(res) -> float:
+    if res.extras.get("pipelined"):
+        return res.extras["pipeline_total"]
+    return res.breakdown.total()
+
+
+def _best(engine, query, prune: bool, repeats: int) -> dict:
+    best = None
+    for _ in range(repeats):
+        res = engine.run(query, "near_data", prune=prune)
+        modeled = _modeled_total(res)
+        if best is None or modeled < best["modeled_s"]:
+            best = {
+                "modeled_s": modeled,
+                "n_passed": res.n_passed,
+                "bytes": res.stats.bytes_fetched,
+                "phase1_bytes": res.extras["phase1_bytes"],
+                "requests": res.stats.requests,
+                "bytes_skipped": res.stats.bytes_skipped,
+                "requests_skipped": res.stats.requests_skipped,
+                "pruned_windows": len(res.extras.get("pruned_windows", [])),
+                "output_bytes": res.extras["output_bytes"],
+            }
+    return best
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        common.N_EVENTS = min(common.N_EVENTS, 20_000)
+    # best-of-N even in smoke: modeled time includes measured compute and
+    # this container's clocks are coarse — the pruned/reference gap on
+    # the accept-all query (~5 ms: five fewer round trips + no predicate
+    # eval) only dominates at the per-side floor, so take real minima
+    repeats = REPEATS
+    store = common.get_store("bitpack")
+    engine = SkimEngine(
+        store, input_link=WAN_1G, near_input_link=LOCAL_DISK
+    )
+    queries = _queries(store.n_events)
+    # warm jit/numpy/page caches so stage timings are clean
+    engine.run(queries["selective"], "near_data", prune=False)
+
+    # disable the decoded-basket LRU for the A/B: pruned and reference
+    # runs must pay identical decode costs or the comparison measures
+    # cache warmth, not pushdown
+    saved_lru = store.decode_cache_baskets
+    store.decode_cache_baskets = 0
+
+    out: dict = {}
+    for name, query in queries.items():
+        ref = _best(engine, query, prune=False, repeats=repeats)
+        res = _best(engine, query, prune=True, repeats=repeats)
+        assert res["n_passed"] == ref["n_passed"], (
+            f"{name}: pruned selection diverged", res, ref,
+        )
+        assert res["output_bytes"] == ref["output_bytes"], (
+            f"{name}: pruned output bytes diverged", res, ref,
+        )
+        out[name] = {"pruned": res, "reference": ref}
+        csv_row(
+            f"prune/{name}/modeled", res["modeled_s"] * 1e6,
+            f"prune=True, {res['pruned_windows']} windows decided from stats",
+        )
+        csv_row(
+            f"prune/{name}/modeled_ref", ref["modeled_s"] * 1e6,
+            "prune=False reference",
+        )
+        csv_row(
+            f"prune/{name}/fetched_mb", res["bytes"] / 1e6,
+            f"vs {ref['bytes']/1e6:.2f} MB unpruned; "
+            f"{res['bytes_skipped']/1e6:.2f} MB + "
+            f"{res['requests_skipped']} requests proved away",
+        )
+    store.decode_cache_baskets = saved_lru
+
+    sel, ref = out["selective"]["pruned"], out["selective"]["reference"]
+    byte_ratio = ref["phase1_bytes"] / max(sel["phase1_bytes"], 1)
+    csv_row(
+        "prune/selective/byte_reduction", byte_ratio,
+        "x fewer phase-1 fetched bytes",
+    )
+    csv_row(
+        "prune/selective/speedup",
+        ref["modeled_s"] / max(sel["modeled_s"], 1e-12),
+        "x modeled, pruned vs reference",
+    )
+    assert byte_ratio >= 2.0, (
+        "selective query should fetch >=2x fewer bytes with pruning", out,
+    )
+    assert sel["modeled_s"] <= ref["modeled_s"], (
+        "pruned selective run modeled slower than reference", out,
+    )
+    # 100%-selectivity query: <=1% modeled overhead (the acceptance bound;
+    # in practice accept-all is faster — one round, no predicate eval).
+    # The deterministic half first: same bytes, strictly fewer requests.
+    r = out["accept_all"]
+    assert r["pruned"]["bytes"] == r["reference"]["bytes"]
+    assert r["pruned"]["requests"] < r["reference"]["requests"]
+    assert r["pruned"]["modeled_s"] <= 1.01 * r["reference"]["modeled_s"], (
+        "accept_all: pruning overhead above 1%", out,
+    )
+    # undecidable query: nothing was provable, so the pruned run executes
+    # the IDENTICAL code path (decisions collapse to the reference) —
+    # "no regression" here is the deterministic model, asserted exactly;
+    # comparing two wall-clock measurements of the same code on shared
+    # cores would only measure host throttle noise
+    r = out["undecidable"]
+    assert r["pruned"]["pruned_windows"] == 0
+    assert r["pruned"]["requests"] == r["reference"]["requests"]
+    assert r["pruned"]["phase1_bytes"] == r["reference"]["phase1_bytes"]
+    assert r["pruned"]["bytes"] == r["reference"]["bytes"], (
+        "undecidable query must not change the byte model", out,
+    )
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv[1:])

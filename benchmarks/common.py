@@ -64,11 +64,19 @@ _CACHE: dict[str, EventStore] = {}
 
 
 def get_store(codec: str = "bitpack") -> EventStore:
-    """Build (or load from a disk cache) the benchmark store."""
+    """Build (or load from a disk cache) the benchmark store.
+
+    The cache filename carries the store's zone-map schema version so a
+    stats upgrade re-materializes stale files instead of silently running
+    the pruning benchmarks without statistics.
+    """
+    from repro.data.store import ZONEMAP_VERSION
+
     if codec in _CACHE:
         return _CACHE[codec]
     path = os.path.join(
-        tempfile.gettempdir(), f"repro_bench_{codec}_{N_EVENTS}.skim"
+        tempfile.gettempdir(),
+        f"repro_bench_z{ZONEMAP_VERSION}_{codec}_{N_EVENTS}.skim",
     )
     if os.path.exists(path):
         st = EventStore.load(path)

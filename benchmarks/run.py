@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              near-data executor: window prefetch overlap + the fused
              predicate/compact device pass), bench_cluster (1->8 node
              scatter-gather scaling + result-cache warm/cold),
+             bench_prune (zone-map predicate pushdown: pruned vs
+             reference on selective / accept-all / undecidable queries),
              bench_scaling (multi-shard)
 """
 
@@ -26,6 +28,7 @@ def main() -> None:
         bench_latency,
         bench_nearstorage,
         bench_pipeline,
+        bench_prune,
         bench_scaling,
         bench_utilization,
         roofline,
@@ -41,6 +44,7 @@ def main() -> None:
         (bench_kernels, "kernel micro"),
         (bench_pipeline, "pipelined/fused executor"),
         (bench_cluster, "distributed skim cluster"),
+        (bench_prune, "zone-map predicate pushdown"),
         (bench_scaling, "beyond-paper scaling/overlap"),
     ]:
         print(f"# --- {label} ---", file=sys.stderr)

@@ -13,6 +13,7 @@ from repro.cluster.cache import (
     cache_key,
     canonical_query,
     query_hash,
+    versioned_key,
 )
 from repro.cluster.coordinator import (
     ClusterBatchResult,
@@ -49,5 +50,6 @@ __all__ = [
     "merge_responses",
     "partition_store",
     "query_hash",
+    "versioned_key",
     "window_spans",
 ]

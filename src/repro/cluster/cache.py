@@ -84,9 +84,24 @@ def query_hash(query: Query | dict | str) -> str:
     return hashlib.sha256(canonical_query(query).encode()).hexdigest()
 
 
+# Version prefix of the cache address format.  v2: shard manifests carry
+# zone-map basket statistics (store.ZONEMAP_VERSION), so stores written
+# before the stats upgrade hash differently — the version prefix makes
+# that an explicit, debuggable namespace instead of a silent miss, and
+# re-encoding identical data keeps hitting (stats are deterministic
+# functions of the basket contents).
+CACHE_KEY_VERSION = 2
+
+
+def versioned_key(query_hash_hex: str, manifest_hash: str) -> str:
+    """Assemble the content address from precomputed hashes (the
+    coordinator hashes the query once per fan-out)."""
+    return f"v{CACHE_KEY_VERSION}.{query_hash_hex}.{manifest_hash}"
+
+
 def cache_key(query: Query | dict | str, manifest_hash: str) -> str:
     """(query canonical form, shard manifest hash) -> content address."""
-    return f"{query_hash(query)}.{manifest_hash}"
+    return versioned_key(query_hash(query), manifest_hash)
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,10 @@ shard's replica; stragglers only stretch the modeled makespan.  Repeat
 queries: the coordinator consults the content-addressed
 :class:`~repro.cluster.cache.SkimResultCache` per (query, shard) before
 scattering, so warm shards skip phase 1 (and everything else) entirely.
+Before either, zone-map pushdown (DESIGN.md §9): shard-level aggregate
+stats that prove a shard empty let the coordinator answer it without
+any RPC at all (single-query path; batches rely on the nodes'
+window-level pruning).
 
 Time is reported in both currencies (DESIGN.md §2c): modeled cluster
 wall-clock = ``max`` over nodes of the node-local modeled pipeline bound
@@ -36,10 +40,12 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from repro.cluster.cache import SkimResultCache, query_hash
+from repro.cluster.cache import SkimResultCache, query_hash, versioned_key
 from repro.cluster.node import BatchResponse, NodeFailure, NodeResponse, StorageNode
-from repro.core.engine import Breakdown
+from repro.core.engine import Breakdown, SkimResult, _skipped_requests
+from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
+from repro.core.zonemap import PRUNE, classify_span
 from repro.data.store import EventStore, FetchStats
 
 CONCURRENCY_MODES = ("serial", "threads")
@@ -72,6 +78,11 @@ class ClusterSkimResult:
     @property
     def cache_hits(self) -> int:
         return sum(1 for r in self.responses if r.cached)
+
+    @property
+    def pruned_shards(self) -> list[int]:
+        """Shards answered from zone-map stats without any RPC."""
+        return [r.shard_id for r in self.responses if r.pruned]
 
 
 @dataclass
@@ -208,6 +219,7 @@ class ClusterCoordinator:
         concurrency: str = "serial",
         basket_events: int | None = None,
         codec: str | None = None,
+        prune: bool = True,
     ):
         if not nodes:
             raise ValueError("need at least one storage node")
@@ -220,6 +232,10 @@ class ClusterCoordinator:
         self.replicas = dict(replicas or {})
         self.cache = cache
         self.concurrency = concurrency
+        # consult shard-level aggregate zone-map stats before any RPC
+        # (DESIGN.md §9): a shard whose manifest proves zero survivors is
+        # answered by the coordinator itself — no node, no cache traffic.
+        self.prune = prune
         ref = nodes[0].shard.store
         self.basket_events = basket_events or ref.basket_events
         self.codec = codec or ref.codec
@@ -260,6 +276,76 @@ class ClusterCoordinator:
             cached=True,
         )
 
+    def _pruned_response(self, node: StorageNode, query: Query) -> NodeResponse | None:
+        """Answer a shard from its manifest alone, or ``None``.
+
+        Consults the shard-level aggregate zone-map stats
+        (:meth:`Shard.zone_stats` via :func:`classify_span` over the whole
+        shard): when they prove no event of the shard can survive, the
+        coordinator synthesizes the node's answer — an empty output with
+        the full per-window ledger, exactly what the node's executor
+        would have produced (zero survivors emit no jagged map, matching
+        the engine's empty-output convention) — and the StorageNode is
+        never contacted.  Shards the aggregate cannot prove still get
+        window-level pruning inside the node's engine.
+        """
+        shard = node.shard
+        st = shard.store
+        if st.n_events == 0:
+            return None  # empty shards execute trivially; keep one path
+        if classify_span(query, st, 0, st.n_events) != PRUNE:
+            return None
+        # the aggregate interval proved the shard; every window prunes a
+        # fortiori (window stats are subsets of the shard hull), so price
+        # the skip per window directly — no re-classification needed, and
+        # the per-window request model matches what the node's executor
+        # would have ledgered
+        plan = plan_skim(query, st)
+        spans = [
+            (s, min(s + shard.window_events, st.n_events))
+            for s in range(0, st.n_events, shard.window_events)
+        ]
+        stats = FetchStats()
+        for a, bnd in spans:
+            nbytes, nb = st.range_comp_bytes(plan.filter_branches, a, bnd)
+            stats.skip(nbytes, _skipped_requests(nbytes, nb, True))
+        cols = {
+            name: np.empty(0, dtype=st.branches[name].np_dtype())
+            for name in plan.output_branches
+        }
+        out = EventStore.from_arrays(
+            cols, jagged={}, basket_events=st.basket_events, codec=st.codec
+        )
+        result = SkimResult(
+            mode="near_data",
+            output=out,
+            n_input=st.n_events,
+            n_passed=0,
+            breakdown=Breakdown(),
+            stats=stats,
+            plan=plan,
+            busy_fraction=0.0,
+            extras={
+                "output_bytes": out.compressed_bytes(),
+                "window_rows": [(a, b, 0) for a, b in spans],
+                "pruned_windows": [(a, b, PRUNE) for a, b in spans],
+                "prune": True,
+                "shard_pruned": True,
+                "fused": False,
+                "pipelined": False,
+            },
+        )
+        return NodeResponse(
+            node_id=node.node_id,
+            shard_id=shard.shard_id,
+            window_ids=list(shard.window_ids),
+            result=result,
+            modeled_s=0.0,
+            straggle_s=0.0,
+            wall_s=0.0,
+            pruned=True,
+        )
+
     def _serve_shard(
         self,
         node: StorageNode,
@@ -267,8 +353,12 @@ class ClusterCoordinator:
         qh: str,
         retries: list[tuple[int, int, int]],
     ) -> NodeResponse:
-        """Cache consult -> primary -> replica retry, for one shard."""
-        key = f"{qh}.{node.shard.manifest_hash}"
+        """Prune consult -> cache consult -> primary -> replica retry."""
+        if self.prune:
+            pruned = self._pruned_response(node, query)
+            if pruned is not None:
+                return pruned
+        key = versioned_key(qh, node.shard.manifest_hash)
         if self.cache is not None:
             hit = self.cache.get(key)
             if hit is not None:
@@ -345,6 +435,10 @@ class ClusterCoordinator:
                 "n_nodes": len(self.nodes),
                 "concurrency": self.concurrency,
                 "query_hash": qh,
+                "pruned_shards": [
+                    r.shard_id for r in responses if r.pruned
+                ],
+                "prune_saved_bytes": stats.bytes_skipped,
             },
         )
 
@@ -365,7 +459,8 @@ class ClusterCoordinator:
         if self.cache is not None:
             for ti, (q, qh) in enumerate(compiled):
                 keys = [
-                    f"{qh}.{node.shard.manifest_hash}" for node in self.nodes
+                    versioned_key(qh, node.shard.manifest_hash)
+                    for node in self.nodes
                 ]
                 hits = self.cache.get_many(keys)  # atomic all-or-nothing
                 if hits is not None:
@@ -417,7 +512,7 @@ class ClusterCoordinator:
                             if n.shard.shard_id == br.shard_id
                         )
                         self.cache.put(
-                            f"{qh}.{node.shard.manifest_hash}",
+                            versioned_key(qh, node.shard.manifest_hash),
                             resp,
                             nbytes=resp.result.extras.get("output_bytes", 0),
                             fetch_bytes=resp.result.stats.bytes_fetched,
@@ -504,22 +599,26 @@ def build_cluster(
     replication: bool = True,
     cache: SkimResultCache | None = None,
     concurrency: str = "serial",
+    prune: bool = True,
     **node_kw,
 ) -> ClusterCoordinator:
     """Partition ``store`` over ``n_nodes`` storage nodes and wire up a
     coordinator.  ``replication=True`` places a standby replica node per
     shard (sharing the shard's baskets — replication is free in-process);
-    ``node_kw`` passes link tiers / executor flags to every node."""
+    ``node_kw`` passes link tiers / executor flags to every node.
+    ``prune`` controls zone-map pushdown at every level: the
+    coordinator's pre-RPC shard skip AND the nodes' window-level
+    pruning (DESIGN.md §9)."""
     from repro.cluster.shard import partition_store
 
     shards = partition_store(
         store, n_nodes, policy=policy, window_events=window_events
     )
-    nodes = [StorageNode(sh, **node_kw) for sh in shards]
+    nodes = [StorageNode(sh, prune=prune, **node_kw) for sh in shards]
     replicas = (
         {
             sh.shard_id: StorageNode(
-                sh, node_id=n_nodes + sh.shard_id, **node_kw
+                sh, node_id=n_nodes + sh.shard_id, prune=prune, **node_kw
             )
             for sh in shards
         }
@@ -533,4 +632,5 @@ def build_cluster(
         concurrency=concurrency,
         basket_events=store.basket_events,
         codec=store.codec,
+        prune=prune,
     )

@@ -52,6 +52,8 @@ class NodeResponse:
     straggle_s: float = 0.0
     wall_s: float = 0.0  # realized time on this host
     cached: bool = False  # filled by the coordinator on cache hits
+    pruned: bool = False  # synthesized by the coordinator from zone-map
+    # stats — the node was never contacted (DESIGN.md §9)
 
 
 @dataclass
@@ -83,11 +85,13 @@ class StorageNode:
         output_link: NetworkModel = WAN_1G,
         fused: bool = True,
         pipeline: bool | str = True,
+        prune: bool = True,
     ):
         self.shard = shard
         self.node_id = shard.shard_id if node_id is None else node_id
         self.near_input_link = near_input_link
         self.output_link = output_link
+        self.prune = prune
         self.engine = SkimEngine(
             shard.store,
             input_link=output_link,
@@ -96,6 +100,7 @@ class StorageNode:
             fused=fused,
             pipeline=pipeline,
             near_input_link=near_input_link,
+            prune=prune,
         )
         self.shared_engine = SharedScanEngine(
             shard.store,
@@ -103,6 +108,7 @@ class StorageNode:
             output_link=output_link,
             chunk_events=shard.window_events,
             fused=fused,
+            prune=prune,
         )
         self._faults: list[_Fault] = []
         self.requests_served = 0

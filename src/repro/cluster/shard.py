@@ -75,6 +75,15 @@ class Shard:
             for name in self.store.branch_names()
         }
 
+    def zone_stats(self, branch: str):
+        """Shard-level aggregate zone-map stats of one branch — every
+        basket of the shard folded into one
+        :class:`~repro.data.store.ZoneStats` interval.  This is what the
+        coordinator consults to skip a whole node before any RPC
+        (DESIGN.md §9); per-window stats stay on the node for the finer
+        in-engine pruning."""
+        return self.store.window_stats(branch, 0, self.store.n_events)
+
 
 def _window_comp_bytes(
     store: EventStore, spans: list[tuple[int, int]]

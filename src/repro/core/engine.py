@@ -43,7 +43,13 @@ import numpy as np
 
 from repro.core.planner import SkimPlan, plan_skim
 from repro.core.query import Query, eval_stage, parse_query
-from repro.data.store import EventStore, FetchStats, WindowPrefetcher
+from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN
+from repro.data.store import (
+    TTREECACHE_BYTES,
+    EventStore,
+    FetchStats,
+    WindowPrefetcher,
+)
 
 
 @dataclass
@@ -200,6 +206,15 @@ def _decode_branches(
     return data
 
 
+def _skipped_requests(nbytes: int, n_baskets: int, coalesce: bool) -> int:
+    """Requests a skipped fetch round would have issued, mirroring
+    :meth:`EventStore.fetch_window`'s model: bulk requests of at most the
+    TTreeCache size when coalescing, one seek per basket otherwise."""
+    if coalesce:
+        return max(1, -(-nbytes // TTREECACHE_BYTES)) if nbytes else 0
+    return n_baskets
+
+
 def _pipeline_schedule(
     records: list[dict], link: NetworkModel, depth: int = 2
 ) -> float:
@@ -245,8 +260,14 @@ def _window_phase2(
 ) -> tuple[dict, dict]:
     """Phase 2 for one surviving window: fetch the output-only branches and
     select survivor columns (shared by the single-query executor and the
-    shared-scan service — the two must stay bit-identical)."""
-    need2 = [x for x in plan.output_only_branches if x not in loaded]
+    shared-scan service — the two must stay bit-identical).
+
+    The fetch set is every output branch not already decoded: for scanned
+    windows ``loaded`` holds the filter branches, so this is exactly the
+    output-only set; for zone-map *accept-all* windows nothing was loaded
+    in phase 1 and the whole output set moves here in one round
+    (DESIGN.md §9)."""
+    need2 = [x for x in plan.output_branches if x not in loaded]
     data2 = _decode_branches(
         store, need2, start, stop, breakdown, stats, coalesce, preloaded=loaded
     )
@@ -367,6 +388,7 @@ class SkimEngine:
         fused: bool = True,
         pipeline: bool | str = True,
         near_input_link: NetworkModel = PCIE_128G,
+        prune: bool = True,
     ):
         self.store = store
         self.input_link = input_link
@@ -380,6 +402,11 @@ class SkimEngine:
         # x16 by default, or an SSD-class tier (e.g. LOCAL_DISK) to model
         # near-storage fetch that the prefetcher actually has to hide
         self.near_input_link = near_input_link
+        # zone-map predicate pushdown (DESIGN.md §9): classify each basket
+        # window from encode-time stats and skip fetch+decode for windows
+        # provably empty (or provably all-surviving).  ``False`` is the
+        # reference path every pruned run must stay bit-identical to.
+        self.prune = prune
 
     # -- public API ----------------------------------------------------------
 
@@ -389,10 +416,16 @@ class SkimEngine:
         mode: str = "near_data",
         fused: bool | None = None,
         pipeline: bool | str | None = None,
+        prune: bool | None = None,
     ) -> SkimResult:
         if not isinstance(query, Query):
             query = parse_query(query)
-        plan = plan_skim(query, self.store)
+        do_prune = (self.prune if prune is None else bool(prune)) and (
+            mode != "client_plain"  # full-scan legacy mode: nothing to push down
+        )
+        plan = plan_skim(
+            query, self.store, window_events=self.chunk_events, prune=do_prune
+        )
         if mode == "client_plain":
             return self._run_client_plain(plan)
         if mode == "client_opt":
@@ -463,8 +496,20 @@ class SkimEngine:
         phase2_stats = FetchStats()
 
         program = plan.compiled_program() if fused else None
+        if fused:
+            # one-time executor warm-up (module imports + backend init)
+            # outside the stage timers: measured stages report steady-state
+            # compute, not interpreter start-up (DESIGN.md §2c)
+            import jax
+
+            from repro.kernels import ops  # noqa: F401
+
+            jax.default_backend()
         use_threads = prefetch == "threads"
         preload = fused or bool(prefetch)
+        # zone-map decisions (DESIGN.md §9): one per chunk window, or None
+        # when pruning is off / nothing was provable
+        decisions = plan.window_decisions
         # per-window load/process records feeding the explicit pipeline
         # schedule model (DESIGN.md §4b)
         win_records: list[dict] = []
@@ -474,11 +519,23 @@ class SkimEngine:
             mode this runs in the prefetch worker; all accounting is
             window-local and merged in window order by the consumer, so
             pipelined byte/request stats are identical to the serial
-            schedule)."""
-            lb, ls = Breakdown(), FetchStats()
-            data = _decode_branches(
-                store, plan.filter_branches, start, stop, lb, ls, coalesce
+            schedule).  Zone-map decided windows (DESIGN.md §9): *prune*
+            never touches the store at all; *accept-all* loads the full
+            output set instead — every event survives, so the one
+            coalesced round that phase 2 would pay moves into the load
+            stage and keeps the double-buffered overlap."""
+            kind = (
+                decisions[start // chunk].decision
+                if decisions is not None
+                else SCAN
             )
+            if kind == PRUNE:
+                return None, Breakdown(), FetchStats()
+            names = (
+                plan.filter_branches if kind == SCAN else plan.output_branches
+            )
+            lb, ls = Breakdown(), FetchStats()
+            data = _decode_branches(store, names, start, stop, lb, ls, coalesce)
             return data, lb, ls
 
         def windows():
@@ -511,13 +568,35 @@ class SkimEngine:
         pad_K = 0  # grows monotonically so padded shapes (and compiled
         # kernels) stay stable across windows once the max multiplicity
         # has been seen
-        for start, stop, preloaded in windows():
+        for wi, (start, stop, preloaded) in enumerate(windows()):
             m = stop - start
+            dec = decisions[wi] if decisions is not None else None
+            kind = dec.decision if dec is not None else SCAN
             dev_cols: dict[str, np.ndarray] = {}
             # window-local processing breakdown/stats (merged into the
             # run totals below; also feeds the pipeline schedule model)
             wb, w2s = Breakdown(), FetchStats()
-            if fused:
+            if kind == PRUNE:
+                # provably no survivor: phase 1 AND phase 2 never happen;
+                # account what the skipped fetch round would have moved
+                stats.skip(
+                    dec.p1_bytes,
+                    _skipped_requests(dec.p1_bytes, dec.p1_baskets, coalesce),
+                )
+                loaded = {}
+                mask = np.zeros(m, dtype=bool)
+            elif kind == ACCEPT_ALL:
+                # provably all survive: skip predicate fetch+eval — the
+                # output set moves in ONE round (preloaded in the load
+                # stage when pipelining, fetched by phase 2 below
+                # otherwise); filter-only branches never move at all
+                stats.skip(
+                    dec.extra_bytes,
+                    0 if coalesce else dec.extra_baskets,
+                )
+                loaded = preloaded if preloaded is not None else {}
+                mask = np.ones(m, dtype=bool)
+            elif fused:
                 # ---- phase 1 (fused path): one pass evaluates the
                 # compiled predicate AND compacts [index]+payload rows ----
                 from repro.core.neardata import fused_window_skim, window_pad_K
@@ -588,6 +667,7 @@ class SkimEngine:
                 )
         phase_wall = time.perf_counter() - t_phase
 
+        phase1_bytes = stats.bytes_fetched  # pre-merge: phase-1 only
         stats.merge(phase2_stats)
 
         with _Timer(b, "write"):
@@ -616,6 +696,19 @@ class SkimEngine:
             "pipelined": bool(prefetch),
             "phase_wall_s": phase_wall,
             "window_rows": window_rows,
+            # phase split of stats.bytes_fetched (accept-all windows fold
+            # their single output round into phase 1 when preloading)
+            "phase1_bytes": phase1_bytes,
+            "phase2_bytes": phase2_stats.bytes_fetched,
+            # zone-map pruning ledger (DESIGN.md §9): every window the
+            # analysis decided without fetching, plus the priced savings
+            # mirrored in stats.bytes_skipped / requests_skipped
+            "pruned_windows": [
+                (d.start, d.stop, d.decision)
+                for d in decisions or ()
+                if d.decision != SCAN
+            ],
+            "prune": decisions is not None,
         }
         if win_records:
             # exact double-buffered schedule from the per-window records
@@ -640,7 +733,8 @@ def run_skim(
     output_link: NetworkModel | None = None,
     fused: bool | None = None,
     pipeline: bool | str | None = None,
+    prune: bool | None = None,
 ) -> SkimResult:
     return SkimEngine(store, input_link, output_link).run(
-        query, mode, fused=fused, pipeline=pipeline
+        query, mode, fused=fused, pipeline=pipeline, prune=prune
     )

@@ -270,6 +270,7 @@ def fused_window_skim(
     K: int | None = None,
     pad_to: int | None = None,
     backend: str | None = None,
+    decision: str = "scan",
 ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
     """One-pass skim of a decoded window (the engine's fused path).
 
@@ -296,18 +297,30 @@ def fused_window_skim(
     Padding events get index >= n_events in the payload index column and
     are dropped after compaction, so a predicate that happens to accept
     an all-zero event (e.g. ``HT < x``) cannot leak phantom survivors.
+
+    ``decision`` is the window's zone-map classification (DESIGN.md §9):
+    ``"accept_all"`` skips predicate evaluation entirely — every event
+    provably survives, so the payload columns pass through whole (payload
+    branches are flat float32 by the planner's contract, hence identical
+    to ``arr[all-true mask]``).  ``"scan"`` (default) runs the normal
+    fused evaluation.  Pruned windows never reach this function: their
+    data is never fetched, let alone decoded.
     """
+    flat = next(
+        n for n in data if not (store.branches.get(n) and store.branches[n].jagged)
+    )
+    E = len(data[flat])
+
+    if decision == "accept_all":
+        mask = np.ones(E, dtype=bool)
+        return mask, {n: np.asarray(data[n]) for n in payload_branches}
+
     import jax
 
     from repro.kernels import ops
 
     if backend is None:
         backend = "pallas" if jax.default_backend() == "tpu" else "host"
-
-    flat = next(
-        n for n in data if not (store.branches.get(n) and store.branches[n].jagged)
-    )
-    E = len(data[flat])
 
     if backend == "host":
         mask = program_eval_np(data, program, E)

@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 
 from repro.core.branchmap import expand_branches, with_counts_branches
 from repro.core.query import Query
+from repro.core.zonemap import SCAN, WindowDecision, classify_windows
 
 
 @dataclass
@@ -30,6 +31,10 @@ class SkimPlan:
     # device path compacts these alongside the survivor indices, so their
     # output columns come straight off the kernel (DESIGN.md §4).
     payload_branches: list[str] = field(default_factory=list)
+    # zone-map pruning decisions, one per basket window of the executor's
+    # chunking (DESIGN.md §9).  ``None`` when planning ran without
+    # pruning; the engine then scans every window (the reference path).
+    window_decisions: list[WindowDecision] | None = None
     _program: object = None
 
     def compiled_program(self):
@@ -46,15 +51,62 @@ class SkimPlan:
         return self._program
 
     def describe(self) -> str:
+        pruned = accept = 0
+        for d in self.window_decisions or ():
+            pruned += d.decision == "prune"
+            accept += d.decision == "accept_all"
         return (
             f"SkimPlan(filter={len(self.filter_branches)} branches, "
             f"output={len(self.output_branches)}, "
             f"phase2={len(self.output_only_branches)}, "
-            f"excluded={len(self.excluded_by_optimization)})"
+            f"excluded={len(self.excluded_by_optimization)}, "
+            f"pruned={pruned}, accept_all={accept})"
         )
 
 
-def plan_skim(query: Query, store) -> SkimPlan:
+def _decide_windows(
+    query: Query,
+    store,
+    window_events: int,
+    filter_branches: list[str],
+    output_branches: list[str],
+) -> list[WindowDecision]:
+    """Classify every basket window and price what each skip saves.
+
+    PRUNE saves the whole phase-1 filter fetch for the window; ACCEPT_ALL
+    saves only the filter branches the output does not keep (the rest
+    still moves, just in the phase-2 round).  Pure metadata — nothing is
+    fetched or decoded here.
+    """
+    spans = [
+        (s, min(s + window_events, store.n_events))
+        for s in range(0, store.n_events, window_events)
+    ]
+    kinds = classify_windows(query, store, spans)
+    out_set = set(output_branches)
+    extra_branches = [b for b in filter_branches if b not in out_set]
+    decisions = []
+    for (a, b), kind in zip(spans, kinds):
+        p1_bytes = p1_baskets = extra_bytes = extra_baskets = 0
+        if kind == "prune":
+            p1_bytes, p1_baskets = store.range_comp_bytes(filter_branches, a, b)
+        elif kind == "accept_all":
+            extra_bytes, extra_baskets = store.range_comp_bytes(
+                extra_branches, a, b
+            )
+        decisions.append(
+            WindowDecision(a, b, kind, p1_bytes, p1_baskets,
+                           extra_bytes, extra_baskets)
+        )
+    return decisions
+
+
+def plan_skim(
+    query: Query,
+    store,
+    window_events: int | None = None,
+    prune: bool = False,
+) -> SkimPlan:
     available = store.branch_names()
 
     filter_set = {b for b in query.filter_branches() if b in available}
@@ -78,6 +130,14 @@ def plan_skim(query: Query, store) -> SkimPlan:
         and store.branches[b].np_dtype() == "float32"
     ]
 
+    decisions = None
+    if prune and window_events:
+        decisions = _decide_windows(
+            query, store, window_events, filter_branches, output_branches
+        )
+        if all(d.decision == SCAN for d in decisions):
+            decisions = None  # nothing provable: identical to no pruning
+
     return SkimPlan(
         query=query,
         filter_branches=filter_branches,
@@ -85,4 +145,5 @@ def plan_skim(query: Query, store) -> SkimPlan:
         output_only_branches=output_only,
         excluded_by_optimization=excluded,
         payload_branches=payload,
+        window_decisions=decisions,
     )

@@ -203,6 +203,34 @@ def bitpack_raw_parts(blob: bytes) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# zone-map statistics (computed at encode time, stored in BasketMeta)
+# ---------------------------------------------------------------------------
+
+
+def basket_stats(values: np.ndarray) -> tuple[float | None, float | None, int | None]:
+    """Per-basket zone-map statistics: ``(vmin, vmax, n_true)``.
+
+    ``vmin``/``vmax`` are the value bounds as exact float64 embeddings of
+    the stored dtype (float32 -> float64 is exact; int32 fits float64
+    exactly), so interval analysis over them reproduces the evaluator's
+    comparison semantics bit-for-bit.  ``n_true`` is the true-count for
+    boolean branches (``None`` otherwise).  Non-finite data (NaN/inf)
+    yields ``(None, None, None)`` — unknown stats degrade to "scan", never
+    to a wrong prune (DESIGN.md §9).
+    """
+    values = np.asarray(values)
+    if values.size == 0:
+        return None, None, None
+    if values.dtype == np.bool_:
+        n_true = int(values.sum())
+        return float(values.min()), float(values.max()), n_true
+    lo, hi = float(values.min()), float(values.max())
+    if not (np.isfinite(lo) and np.isfinite(hi)):
+        return None, None, None
+    return lo, hi, None
+
+
+# ---------------------------------------------------------------------------
 
 
 def _zlib_encode(values: np.ndarray) -> bytes:

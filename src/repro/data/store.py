@@ -24,16 +24,27 @@ from __future__ import annotations
 
 import io
 import json
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.data.codecs import decode_basket, encode_basket
+from repro.data.codecs import basket_stats, decode_basket, encode_basket
 
 # Paper §4: "A 100 MB TTreeCache is used in all methods".  The coalesced
 # window fetch aggregates every basket a read round needs into bulk
 # requests of at most this size (DESIGN.md §2b).
 TTREECACHE_BYTES = 100 * 1024 * 1024
+
+# Version of the zone-map statistics schema carried by BasketMeta and the
+# manifest.  Bumping this changes every manifest_hash (and therefore every
+# cluster cache key), which is exactly the invalidation we want when the
+# stat semantics change (DESIGN.md §9).
+ZONEMAP_VERSION = 1
+
+# Default capacity (in baskets) of the per-store decoded-basket LRU.
+DECODE_CACHE_BASKETS = 64
 
 
 @dataclass
@@ -54,6 +65,39 @@ class BasketMeta:
     n_values: int  # values stored (== n_entries for flat branches)
     comp_bytes: int
     raw_bytes: int
+    # zone-map statistics (DESIGN.md §9): value bounds as exact float64
+    # embeddings of the stored dtype, plus the true-count for bool
+    # branches.  ``None`` means "unknown" (empty basket, non-finite data,
+    # or a store written before ZONEMAP_VERSION) and always degrades to
+    # "scan" in the pruning analysis — never to a wrong skip.
+    vmin: float | None = None
+    vmax: float | None = None
+    n_true: int | None = None
+
+    def stats_row(self) -> list:
+        return [
+            self.first_entry, self.n_entries, self.n_values,
+            self.comp_bytes, self.raw_bytes,
+            self.vmin, self.vmax, self.n_true,
+        ]
+
+
+@dataclass(frozen=True)
+class ZoneStats:
+    """Aggregate zone-map statistics of one branch over an event range.
+
+    ``lo``/``hi`` bound every value in the range (``None`` = unknown or no
+    values); ``n_true`` sums bool true-counts (``None`` for non-bool or
+    unknown).  ``n_entries``/``n_values`` count the covered events/values
+    — for flat branches they coincide, for jagged value branches
+    ``n_values`` is the object total the counts branch describes.
+    """
+
+    lo: float | None
+    hi: float | None
+    n_true: int | None
+    n_entries: int
+    n_values: int
 
 
 @dataclass
@@ -61,15 +105,27 @@ class FetchStats:
     bytes_fetched: int = 0
     requests: int = 0
     by_branch: dict = field(default_factory=dict)
+    # bytes/requests the zone-map pruning proved unnecessary and never
+    # issued (DESIGN.md §9).  Not part of ``bytes_fetched`` — these are
+    # the savings ledger, not traffic.
+    bytes_skipped: int = 0
+    requests_skipped: int = 0
 
     def record(self, branch: str, nbytes: int, n_requests: int = 1) -> None:
         self.bytes_fetched += nbytes
         self.requests += n_requests
         self.by_branch[branch] = self.by_branch.get(branch, 0) + nbytes
 
+    def skip(self, nbytes: int, n_requests: int = 0) -> None:
+        """Account a fetch the pruning analysis proved away."""
+        self.bytes_skipped += nbytes
+        self.requests_skipped += n_requests
+
     def merge(self, other: "FetchStats") -> None:
         self.bytes_fetched += other.bytes_fetched
         self.requests += other.requests
+        self.bytes_skipped += other.bytes_skipped
+        self.requests_skipped += other.requests_skipped
         for k, v in other.by_branch.items():
             self.by_branch[k] = self.by_branch.get(k, 0) + v
 
@@ -159,13 +215,27 @@ class WindowPrefetcher:
 class EventStore:
     """Columnar store with basket-granular compressed access."""
 
-    def __init__(self, basket_events: int = 4096, codec: str = "bitpack"):
+    def __init__(
+        self,
+        basket_events: int = 4096,
+        codec: str = "bitpack",
+        decode_cache_baskets: int = DECODE_CACHE_BASKETS,
+    ):
         self.basket_events = int(basket_events)
         self.codec = codec
         self.branches: dict[str, Branch] = {}
         self.n_events = 0
         self._baskets: dict[str, list[BasketMeta]] = {}
         self._blobs: dict[str, list[bytes]] = {}
+        # small decoded-basket LRU so windows that overlap between phase 1
+        # and phase 2 (counts branches, shared-scan tenants) don't decode
+        # the same basket twice.  Keyed by (branch, blob) — content, not
+        # identity — so it can never serve stale data.  0 disables.
+        self.decode_cache_baskets = int(decode_cache_baskets)
+        self._decode_cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._decode_lock = threading.Lock()
+        self.decode_cache_hits = 0
+        self.decode_cache_misses = 0
 
     # -- construction -------------------------------------------------------
 
@@ -212,8 +282,12 @@ class EventStore:
             stop = min(start + self.basket_events, self.n_events)
             chunk = arr[start:stop]
             blob = encode_basket(chunk, self.codec)
+            vmin, vmax, n_true = basket_stats(chunk)
             metas.append(
-                BasketMeta(start, stop - start, len(chunk), len(blob), chunk.nbytes)
+                BasketMeta(
+                    start, stop - start, len(chunk), len(blob), chunk.nbytes,
+                    vmin=vmin, vmax=vmax, n_true=n_true,
+                )
             )
             blobs.append(blob)
         self.branches[name] = br
@@ -231,8 +305,12 @@ class EventStore:
             v0, v1 = offsets[start], offsets[stop]
             chunk = values[v0:v1]
             blob = encode_basket(chunk, self.codec)
+            vmin, vmax, n_true = basket_stats(chunk)
             metas.append(
-                BasketMeta(start, stop - start, len(chunk), len(blob), chunk.nbytes)
+                BasketMeta(
+                    start, stop - start, len(chunk), len(blob), chunk.nbytes,
+                    vmin=vmin, vmax=vmax, n_true=n_true,
+                )
             )
             blobs.append(blob)
         self.branches[name] = br
@@ -269,25 +347,70 @@ class EventStore:
         names = names if names is not None else self.branch_names()
         return sum(m.raw_bytes for n in names for m in self._baskets[n])
 
+    def range_comp_bytes(self, names, start: int, stop: int) -> tuple[int, int]:
+        """``(compressed bytes, basket count)`` of ``names`` overlapping
+        ``[start, stop)`` — what a fetch round for that window would move.
+        Pure metadata; the pruning ledger prices skipped fetches with it."""
+        total = baskets = 0
+        for name in names:
+            for i in self.basket_ids_for_range(name, start, stop):
+                total += self._baskets[name][i].comp_bytes
+                baskets += 1
+        return total, baskets
+
+    def window_stats(self, name: str, start: int, stop: int) -> ZoneStats | None:
+        """Aggregate zone-map stats of one branch over ``[start, stop)``.
+
+        Returns ``None`` when any overlapping basket lacks stats (legacy
+        store, non-finite data) — the conservative "unknown" that the
+        interval analysis maps to *scan*.  Baskets only partially inside
+        the range contribute their full-basket bounds, which keeps the
+        interval a superset of the range's true values (conservative in
+        the safe direction for both prune and accept-all).
+        """
+        ids = self.basket_ids_for_range(name, start, stop)
+        lo = hi = None
+        n_true: int | None = 0
+        n_entries = n_values = 0
+        is_bool = self.branches[name].np_dtype() == np.bool_
+        for i in ids:
+            m = self._baskets[name][i]
+            n_entries += m.n_entries
+            n_values += m.n_values
+            if m.n_values == 0:
+                continue  # empty basket constrains nothing
+            if m.vmin is None or m.vmax is None:
+                return None  # unknown stats poison the whole range
+            lo = m.vmin if lo is None else min(lo, m.vmin)
+            hi = m.vmax if hi is None else max(hi, m.vmax)
+            if is_bool:
+                if m.n_true is None:
+                    return None
+                n_true += m.n_true
+        return ZoneStats(
+            lo=lo, hi=hi, n_true=n_true if is_bool else None,
+            n_entries=n_entries, n_values=n_values,
+        )
+
     def manifest(self) -> dict:
         """Canonical description of the store's physical layout: branch
         schemas plus every basket's placement and size.  Two stores holding
         byte-identical baskets produce equal manifests, which is what makes
         the manifest hash usable as a content address for skim results
-        (DESIGN.md §5)."""
+        (DESIGN.md §5).  Since ZONEMAP_VERSION 1 every basket row also
+        carries its zone-map stats, so shard manifests ship the pruning
+        metadata for free and any stat change re-addresses the content."""
         return {
             "n_events": self.n_events,
             "basket_events": self.basket_events,
             "codec": self.codec,
+            "zonemap_version": ZONEMAP_VERSION,
             "branches": {
                 n: [b.dtype, b.jagged, b.counts_branch]
                 for n, b in sorted(self.branches.items())
             },
             "baskets": {
-                n: [
-                    [m.first_entry, m.n_entries, m.n_values, m.comp_bytes, m.raw_bytes]
-                    for m in self._baskets[n]
-                ]
+                n: [m.stats_row() for m in self._baskets[n]]
                 for n in sorted(self._baskets)
             },
         }
@@ -409,7 +532,42 @@ class EventStore:
         return out
 
     def decode_blob(self, name: str, blob: bytes) -> np.ndarray:
-        return decode_basket(blob, self.codec, self.branches[name].np_dtype())
+        """Decode one basket blob, memoized through a small per-store LRU.
+
+        The cache key is ``(branch, blob bytes)`` — content-addressed, so
+        hits are always exact.  Cached arrays are frozen (read-only) to
+        keep aliasing safe across phase 1 / phase 2 and across shared-scan
+        tenants; every current consumer slices or copies.  Thread-safe:
+        the :class:`WindowPrefetcher` worker decodes concurrently with the
+        consumer's phase 2.
+        """
+        if self.decode_cache_baskets <= 0:
+            return decode_basket(blob, self.codec, self.branches[name].np_dtype())
+        key = (name, blob)
+        with self._decode_lock:
+            cached = self._decode_cache.get(key)
+            if cached is not None:
+                self._decode_cache.move_to_end(key)
+                self.decode_cache_hits += 1
+                return cached
+            self.decode_cache_misses += 1
+        vals = decode_basket(blob, self.codec, self.branches[name].np_dtype())
+        if vals.flags.writeable:
+            vals.flags.writeable = False
+        with self._decode_lock:
+            self._decode_cache[key] = vals
+            self._decode_cache.move_to_end(key)
+            while len(self._decode_cache) > self.decode_cache_baskets:
+                self._decode_cache.popitem(last=False)
+        return vals
+
+    def decode_cache_stats(self) -> dict:
+        with self._decode_lock:
+            return {
+                "hits": self.decode_cache_hits,
+                "misses": self.decode_cache_misses,
+                "resident": len(self._decode_cache),
+            }
 
     # -- convenience full reads (not timed; for tests and writers) ----------
 
@@ -454,6 +612,7 @@ class EventStore:
             "basket_events": self.basket_events,
             "codec": self.codec,
             "n_events": self.n_events,
+            "zonemap_version": ZONEMAP_VERSION,
             "branches": {
                 n: {
                     "dtype": b.dtype,
@@ -463,10 +622,7 @@ class EventStore:
                 for n, b in self.branches.items()
             },
             "baskets": {
-                n: [
-                    [m.first_entry, m.n_entries, m.n_values, m.comp_bytes, m.raw_bytes]
-                    for m in metas
-                ]
+                n: [m.stats_row() for m in metas]
                 for n, metas in self._baskets.items()
             },
         }

@@ -34,12 +34,14 @@ from repro.core.engine import (
     SkimResult,
     _concat_output,
     _decode_branches,
+    _skipped_requests,
     _Timer,
     _window_phase2,
     _write_output,
 )
 from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
+from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN
 from repro.data.store import EventStore, FetchStats, WindowPrefetcher
 from repro.models.model import decode_step, init_cache, prefill
 
@@ -95,12 +97,17 @@ class SharedScanEngine:
         chunk_events: int | None = None,
         fused: bool = True,
         pipeline: bool | str = False,
+        prune: bool = True,
     ):
         self.store = store
         self.input_link = input_link
         self.output_link = output_link or input_link
         self.chunk_events = chunk_events or store.basket_events
         self.fused = fused
+        # zone-map pushdown (DESIGN.md §9): per-tenant window decisions;
+        # the shared union fetch skips a window only when EVERY tenant
+        # prunes it.  ``False`` is the reference path.
+        self.prune = prune
         # False = serial window loop; "threads" = real WindowPrefetcher
         # worker.  (The modeled pipeline schedule is a single-query
         # SkimEngine feature; the shared scan's win is byte amortization.)
@@ -118,7 +125,10 @@ class SharedScanEngine:
         t0 = time.perf_counter()
 
         parsed = [q if isinstance(q, Query) else parse_query(q) for q in queries]
-        plans = [plan_skim(q, store) for q in parsed]
+        plans = [
+            plan_skim(q, store, window_events=chunk, prune=self.prune)
+            for q in parsed
+        ]
         programs = [p.compiled_program() if self.fused else None for p in plans]
 
         # union of filter branches, first-seen order (deterministic)
@@ -132,7 +142,32 @@ class SharedScanEngine:
 
         shared_b, shared_stats = Breakdown(), FetchStats()
 
+        # per-tenant zone-map decisions (DESIGN.md §9)
+        decisions = [p.window_decisions for p in plans]
+
+        def _tenant_kind(i: int, wi: int) -> str:
+            return decisions[i][wi].decision if decisions[i] is not None else SCAN
+
+        # the shared union fetch is skipped only when EVERY tenant prunes
+        # the window: accept-all tenants still want the union decoded
+        # (their phase 2 reuses it — dropping the shared pass would make
+        # each of them re-fetch the overlap privately and cost MORE bytes
+        # than the unpruned reference)
+        n_windows = -(-n // chunk) if n else 0
+        load_windows = {
+            wi
+            for wi in range(n_windows)
+            if any(_tenant_kind(i, wi) != PRUNE for i in range(len(plans)))
+        }
+
         def load_window(start: int, stop: int):
+            if start // chunk not in load_windows:
+                # every tenant proved this window empty: the shared union
+                # fetch never happens and no tenant runs phase 2 either
+                ls = FetchStats()
+                nbytes, nb = store.range_comp_bytes(union, start, stop)
+                ls.skip(nbytes, _skipped_requests(nbytes, nb, coalesce=True))
+                return None, Breakdown(), ls
             lb, ls = Breakdown(), FetchStats()
             data = _decode_branches(store, union, start, stop, lb, ls, coalesce=True)
             return data, lb, ls
@@ -151,15 +186,37 @@ class SharedScanEngine:
         src = WindowPrefetcher(
             n, chunk, load_window, enabled=(self.pipeline == "threads")
         )
-        for start, stop, (data, lb, ls) in src:
+        for wi, (start, stop, (data, lb, ls)) in enumerate(src):
             shared_b.merge(lb)
             shared_stats.merge(ls)
             m = stop - start
             for i, plan in enumerate(plans):
                 b = per_b[i]
                 dev_cols: dict[str, np.ndarray] = {}
+                kind = _tenant_kind(i, wi)
+                if kind == PRUNE:
+                    # provably no survivor for this tenant: no filter
+                    # eval, no phase 2
+                    window_rows[i].append((start, stop, 0))
+                    continue
                 with _Timer(b, "filter"):
-                    if not plan.filter_branches:
+                    if (
+                        kind == ACCEPT_ALL
+                        and self.fused
+                        and data is not None
+                        and plan.filter_branches  # selection-free: no data
+                    ):
+                        # provably all survive: the fused executor's
+                        # decision short-circuit skips predicate eval and
+                        # passes the payload columns through whole
+                        mask, dev_cols = fused_window_skim(
+                            data, programs[i], store,
+                            payload_branches=plan.payload_branches,
+                            decision=ACCEPT_ALL,
+                        )
+                    elif kind == ACCEPT_ALL:
+                        mask = np.ones(m, dtype=bool)
+                    elif not plan.filter_branches:
                         # selection-free tenant: pure projection
                         mask = np.ones(m, dtype=bool)
                     elif self.fused:
@@ -185,7 +242,8 @@ class SharedScanEngine:
                     continue
                 n_passed[i] += k
                 cols, jagged = _window_phase2(
-                    store, plan, start, stop, mask, dev_cols, data, b,
+                    store, plan, start, stop, mask, dev_cols,
+                    data if data is not None else {}, b,
                     per_stats[i], coalesce=True,
                 )
                 jagged_maps[i].update(jagged)
@@ -216,6 +274,12 @@ class SharedScanEngine:
                         "pipelined": self.pipeline == "threads",
                         "shared_scan": True,
                         "window_rows": window_rows[i],
+                        "pruned_windows": [
+                            (d.start, d.stop, d.decision)
+                            for d in decisions[i] or ()
+                            if d.decision != SCAN
+                        ],
+                        "prune": decisions[i] is not None,
                     },
                 )
             )

@@ -1,0 +1,293 @@
+"""Zone-map interval analysis (DESIGN.md §9).
+
+The safety contract, pinned both by hand-built edge cases and by
+hypothesis property tests over random stores and random predicates:
+
+  * a window classified PRUNE never contains a survivor,
+  * a window classified ACCEPT_ALL never contains a failure,
+
+for every AST shape (flat cut, trigger OR, object selection, HT), every
+operator (including the float32-rounding ``==``/``!=``/``abs`` edges),
+and windows whose statistics are partially or wholly unknown.
+"""
+
+import numpy as np
+
+from repro.core.query import eval_stage, parse_query
+from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN, classify_span, classify_windows
+from repro.data.store import EventStore
+
+# the hand-built edge cases below run everywhere; only the random
+# property tests need hypothesis (guarded like the other hypothesis
+# files, but per-section so the deterministic half still runs)
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+BASKET = 32
+
+
+def _store_from(columns, jagged=None, basket_events=BASKET):
+    return EventStore.from_arrays(
+        columns, jagged=jagged or {}, basket_events=basket_events
+    )
+
+
+def _spans(store, window_events):
+    return [
+        (s, min(s + window_events, store.n_events))
+        for s in range(0, store.n_events, window_events)
+    ]
+
+
+def _window_data(columns, jagged, start, stop):
+    """Ground-truth decoded window: exactly what the executor hands the
+    evaluator for [start, stop)."""
+    out = {}
+    for name, arr in columns.items():
+        if name in (jagged or {}):
+            counts = columns[jagged[name]]
+            offsets = np.concatenate([[0], np.cumsum(counts)])
+            out[name] = arr[offsets[start]:offsets[stop]]
+        else:
+            out[name] = arr[start:stop]
+    return out
+
+
+def _true_mask(query, data, m):
+    mask = np.ones(m, dtype=bool)
+    for _, stage in query.stages():
+        mask &= eval_stage(stage, data, m)
+    return mask
+
+
+def _check_invariants(query, store, columns, jagged, window_events=BASKET):
+    for (a, b), kind in zip(
+        spans := _spans(store, window_events),
+        classify_windows(query, store, spans),
+    ):
+        data = _window_data(columns, jagged, a, b)
+        mask = _true_mask(query, data, b - a)
+        if kind == PRUNE:
+            assert not mask.any(), (
+                f"window [{a},{b}) pruned but has {int(mask.sum())} survivors"
+            )
+        elif kind == ACCEPT_ALL:
+            assert mask.all(), (
+                f"window [{a},{b}) accept-all but fails "
+                f"{int((~mask).sum())} events"
+            )
+
+
+# ---------------------------------------------------------------------------
+# hand-built edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_monotone_branch_prunes_tail_windows():
+    lumi = (np.arange(256) // 64).astype(np.int32)
+    store = _store_from({"lumi": lumi, "x": np.zeros(256, np.float32)})
+    q = parse_query({"branches": ["x"], "selection": {
+        "preselection": [{"branch": "lumi", "op": "<=", "value": 0}]}})
+    kinds = classify_windows(q, store, _spans(store, 64))
+    assert kinds == [ACCEPT_ALL, PRUNE, PRUNE, PRUNE]
+
+
+def test_floor_cut_accepts_all():
+    met = (np.random.default_rng(0).exponential(30, 200) + 1).astype(np.float32)
+    store = _store_from({"met": met})
+    q = parse_query({"branches": ["met"], "selection": {
+        "preselection": [{"branch": "met", "op": ">", "value": 0.5}]}})
+    assert set(classify_windows(q, store, _spans(store, BASKET))) == {ACCEPT_ALL}
+
+
+def test_selection_free_query_is_accept_all():
+    store = _store_from({"x": np.arange(100, dtype=np.int32)})
+    q = parse_query({"branches": ["x"]})
+    assert classify_span(q, store, 0, 100) == ACCEPT_ALL
+
+
+def test_float32_threshold_rounding_edge():
+    """0.1 rounds UP through float32; a window holding exactly
+    float32(0.1) must classify as the evaluator compares (NEVER for
+    ``> 0.1``), not as the raw float64 interval would suggest."""
+    x = np.full(64, np.float32(0.1), dtype=np.float32)
+    store = _store_from({"x": x})
+    q = parse_query({"branches": ["x"], "selection": {
+        "preselection": [{"branch": "x", "op": ">", "value": 0.1}]}})
+    cols = {"x": x}
+    assert classify_span(q, store, 0, 64) == PRUNE
+    assert not _true_mask(q, cols, 64).any()
+    q2 = parse_query({"branches": ["x"], "selection": {
+        "preselection": [{"branch": "x", "op": "<=", "value": 0.1}]}})
+    assert classify_span(q2, store, 0, 64) == ACCEPT_ALL
+    assert _true_mask(q2, cols, 64).all()
+
+
+def test_unknown_stats_degrade_to_scan():
+    store = _store_from({"x": np.arange(64, dtype=np.float32)})
+    q = parse_query({"branches": ["x"], "selection": {
+        "preselection": [{"branch": "x", "op": "<", "value": -1.0}]}})
+    assert classify_span(q, store, 0, 64) == PRUNE
+    # strip the stats (a store written before ZONEMAP_VERSION)
+    for m in store._baskets["x"]:
+        m.vmin = m.vmax = m.n_true = None
+    assert classify_span(q, store, 0, 64) == SCAN
+
+
+def test_nonfinite_data_never_prunes():
+    x = np.array([np.nan] * 32 + [1.0] * 32, dtype=np.float32)
+    store = _store_from({"x": x})
+    q = parse_query({"branches": ["x"], "selection": {
+        "preselection": [{"branch": "x", "op": ">", "value": 100.0}]}})
+    # the NaN basket carries no stats -> scan, never a wrong prune; the
+    # finite basket (all 1.0) proves out normally
+    assert classify_windows(q, store, _spans(store, BASKET)) == [SCAN, PRUNE]
+
+
+def test_trigger_or_prunes_and_accepts():
+    cols = {
+        "a": np.zeros(96, dtype=bool),
+        "b": np.array([False] * 32 + [True] * 32 + [False] * 32),
+    }
+    store = _store_from(cols)
+    q = parse_query({"branches": ["a"], "selection": {
+        "event": [{"type": "any", "branches": ["a", "b"]}]}})
+    assert classify_windows(q, store, _spans(store, BASKET)) == [
+        PRUNE, ACCEPT_ALL, PRUNE,
+    ]
+
+
+def test_object_selection_prunes_on_counts_and_values():
+    counts = np.array([0] * 32 + [2] * 64, dtype=np.int32)
+    pt = np.full(int(counts.sum()), 10.0, dtype=np.float32)
+    pt[64:] = 50.0  # last window's objects all pass
+    cols = {"nObj": counts, "Obj_pt": pt}
+    store = _store_from(cols, jagged={"Obj_pt": "nObj"})
+    q = parse_query({"branches": ["Obj_*"], "selection": {"object": [
+        {"collection": "Obj",
+         "cuts": [{"var": "pt", "op": ">", "value": 20.0}]}]}})
+    kinds = classify_windows(q, store, _spans(store, BASKET))
+    # w0: no objects at all; w1: objects exist but none passes; w2: every
+    # object passes and every event has >= 1
+    assert kinds == [PRUNE, PRUNE, ACCEPT_ALL]
+    _check_invariants(q, store, cols, {"Obj_pt": "nObj"})
+
+
+def test_ht_zero_and_bounded():
+    counts = np.array([0] * 32 + [3] * 32, dtype=np.int32)
+    pt = np.full(96, 50.0, dtype=np.float32)
+    cols = {"nJet": counts, "Jet_pt": pt}
+    store = _store_from(cols, jagged={"Jet_pt": "nJet"})
+    jag = {"Jet_pt": "nJet"}
+    q = parse_query({"branches": ["Jet_*"], "selection": {"event": [
+        {"type": "ht", "collection": "Jet", "var": "pt",
+         "op": ">", "value": 100.0}]}})
+    # w0: HT == 0 exactly -> prune; w1: HT == 150 > 100 provably
+    assert classify_windows(q, store, _spans(store, BASKET)) == [
+        PRUNE, ACCEPT_ALL,
+    ]
+    _check_invariants(q, store, cols, jag)
+    # object_cuts that nothing passes force HT == 0 everywhere
+    q2 = parse_query({"branches": ["Jet_*"], "selection": {"event": [
+        {"type": "ht", "collection": "Jet", "var": "pt",
+         "object_cuts": [{"var": "pt", "op": ">", "value": 60.0}],
+         "op": "<", "value": 1.0}]}})
+    assert classify_windows(q2, store, _spans(store, BASKET)) == [
+        ACCEPT_ALL, ACCEPT_ALL,
+    ]
+    _check_invariants(q2, store, cols, jag)
+
+
+# ---------------------------------------------------------------------------
+# property tests: random stores x random predicates
+# ---------------------------------------------------------------------------
+
+_OPS = [">", ">=", "<", "<=", "==", "!=", "abs<", "abs>"]
+
+if HAVE_HYPOTHESIS:
+    _threshold = st.one_of(
+        st.floats(min_value=-150.0, max_value=150.0,
+                  allow_nan=False, allow_infinity=False),
+        st.sampled_from([0.0, 0.1, 1.0, 30.0, -30.0, 2.5]),
+    )
+
+    @st.composite
+    def _random_case(draw):
+        seed = draw(st.integers(0, 2**16))
+        n_events = draw(st.integers(33, 160))
+        rng = np.random.default_rng(seed)
+        counts = rng.poisson(
+            draw(st.floats(0.0, 3.0)), n_events
+        ).astype(np.int32)
+        columns = {
+            "met": (rng.normal(30.0, 25.0, n_events)).astype(np.float32),
+            "cnt": rng.integers(-5, 40, n_events).astype(np.int32),
+            "trig": rng.random(n_events)
+            < draw(st.sampled_from([0.0, 0.3, 1.0])),
+            "trig2": rng.random(n_events)
+            < draw(st.sampled_from([0.0, 0.5, 1.0])),
+            "nObj": counts,
+            "Obj_pt": (
+                rng.exponential(25.0, int(counts.sum())) - 10.0
+            ).astype(np.float32),
+        }
+        jagged = {"Obj_pt": "nObj"}
+
+        sel: dict = {}
+        if draw(st.booleans()):
+            sel.setdefault("preselection", []).append(
+                {"branch": draw(st.sampled_from(["met", "cnt", "nObj"])),
+                 "op": draw(st.sampled_from(_OPS)),
+                 "value": draw(_threshold)}
+            )
+        if draw(st.booleans()):
+            cuts = [
+                {"var": "pt", "op": draw(st.sampled_from(_OPS)),
+                 "value": draw(_threshold)}
+                for _ in range(draw(st.integers(0, 2)))
+            ]
+            sel.setdefault("object", []).append(
+                {"collection": "Obj", "cuts": cuts,
+                 "min_count": draw(st.integers(0, 3))}
+            )
+        events = []
+        if draw(st.booleans()):
+            events.append({"type": "any", "branches": ["trig", "trig2"]})
+        if draw(st.booleans()):
+            ht = {"type": "ht", "collection": "Obj", "var": "pt",
+                  "op": draw(st.sampled_from(_OPS)),
+                  "value": draw(_threshold)}
+            if draw(st.booleans()):
+                ht["object_cuts"] = [{"var": "pt",
+                                      "op": draw(st.sampled_from(_OPS)),
+                                      "value": draw(_threshold)}]
+            events.append(ht)
+        if events:
+            sel["event"] = events
+        doc = {"branches": ["met", "Obj_*", "cnt"], "selection": sel}
+        return columns, jagged, doc
+
+    @given(_random_case())
+    @settings(max_examples=150, deadline=None)
+    def test_prune_never_drops_survivors_accept_never_keeps_failures(case):
+        columns, jagged, doc = case
+        store = _store_from(columns, jagged=jagged)
+        query = parse_query(doc)
+        _check_invariants(query, store, columns, jagged)
+
+    @given(_random_case(), st.integers(1, 3))
+    @settings(max_examples=60, deadline=None)
+    def test_invariants_hold_for_multi_basket_windows(case, nb):
+        """Windows spanning several baskets aggregate stats; the
+        contract must survive the aggregation."""
+        columns, jagged, doc = case
+        store = _store_from(columns, jagged=jagged)
+        query = parse_query(doc)
+        _check_invariants(
+            query, store, columns, jagged, window_events=BASKET * nb
+        )
