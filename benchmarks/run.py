@@ -11,46 +11,86 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              scatter-gather scaling + result-cache warm/cold),
              bench_prune (zone-map predicate pushdown: pruned vs
              reference on selective / accept-all / undecidable queries),
+             bench_expr (derived-expression tier: Z-window skim, fused
+             vs staged and pruned vs reference),
              bench_scaling (multi-shard)
+
+Module selection (CI and the 2-core dev host pay for one figure, not the
+suite)::
+
+    python benchmarks/run.py --only prune,expr          # just these two
+    python benchmarks/run.py --skip kernels,roofline    # all but these
+    python benchmarks/run.py --only expr --smoke        # shrunken store
 """
 
 from __future__ import annotations
 
+import argparse
+import inspect
 import sys
 import time
 
 
-def main() -> None:
-    from benchmarks import (
-        bench_breakdown,
-        bench_cluster,
-        bench_kernels,
-        bench_latency,
-        bench_nearstorage,
-        bench_pipeline,
-        bench_prune,
-        bench_scaling,
-        bench_utilization,
-        roofline,
+def _modules() -> list[tuple[str, str, str]]:
+    """(short name, module attr, figure label) in run order."""
+    return [
+        ("latency", "bench_latency", "Fig4a latency"),
+        ("breakdown", "bench_breakdown", "Fig4b breakdown"),
+        ("nearstorage", "bench_nearstorage", "Fig5a near-storage"),
+        ("utilization", "bench_utilization", "Fig5b utilization"),
+        ("kernels", "bench_kernels", "kernel micro"),
+        ("pipeline", "bench_pipeline", "pipelined/fused executor"),
+        ("cluster", "bench_cluster", "distributed skim cluster"),
+        ("prune", "bench_prune", "zone-map predicate pushdown"),
+        ("expr", "bench_expr", "derived-expression tier"),
+        ("scaling", "bench_scaling", "beyond-paper scaling/overlap"),
+        ("roofline", "roofline", "roofline (from dry-run artifacts)"),
+    ]
+
+
+def _parse_names(raw: str | None, known: list[str]) -> set[str]:
+    if not raw:
+        return set()
+    names = {n.strip() for n in raw.split(",") if n.strip()}
+    unknown = names - set(known)
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark(s): {sorted(unknown)}; known: {known}"
+        )
+    return names
+
+
+def main(argv: list[str] | None = None) -> None:
+    known = [name for name, _, _ in _modules()]
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", help=f"comma-separated subset of {known}")
+    ap.add_argument("--skip", help="comma-separated modules to leave out")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="pass smoke mode (shrunken store) to modules that support it",
     )
+    args = ap.parse_args(argv)
+    only = _parse_names(args.only, known)
+    skip = _parse_names(args.skip, known)
+    if only & skip:
+        raise SystemExit(f"--only and --skip overlap: {sorted(only & skip)}")
+
+    import benchmarks
 
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
-    for mod, label in [
-        (bench_latency, "Fig4a latency"),
-        (bench_breakdown, "Fig4b breakdown"),
-        (bench_nearstorage, "Fig5a near-storage"),
-        (bench_utilization, "Fig5b utilization"),
-        (bench_kernels, "kernel micro"),
-        (bench_pipeline, "pipelined/fused executor"),
-        (bench_cluster, "distributed skim cluster"),
-        (bench_prune, "zone-map predicate pushdown"),
-        (bench_scaling, "beyond-paper scaling/overlap"),
-    ]:
+    for name, attr, label in _modules():
+        if (only and name not in only) or name in skip:
+            continue
+        __import__(f"benchmarks.{attr}")
+        mod = getattr(benchmarks, attr)
         print(f"# --- {label} ---", file=sys.stderr)
-        mod.run()
-    print("# --- roofline (from dry-run artifacts) ---", file=sys.stderr)
-    roofline.run()
+        kwargs = (
+            {"smoke": True}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters
+            else {}
+        )
+        mod.run(**kwargs)
     print(f"# total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
 
 

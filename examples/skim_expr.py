@@ -1,0 +1,78 @@
+"""Derived-kinematics queries: the physics cuts JSON could not say before.
+
+1. build a synthetic NanoAOD-like store,
+2. run a Z→ee skim — an invariant-mass window, ΔR(e, jet) isolation,
+   and an arithmetic run-range expression — through the fused executor,
+3. show the zone maps pruning basket windows for the derived cut
+   (interval arithmetic over the expression tree, DESIGN.md §10),
+4. demonstrate era-robust trigger ORs: an HLT branch this store never
+   carried counts as False instead of killing the skim.
+
+Run: PYTHONPATH=src python examples/skim_expr.py
+"""
+
+from repro.core import SkimEngine
+from repro.core.engine import LOCAL_DISK, WAN_1G
+from repro.data.synth import make_nanoaod_like
+
+N_EVENTS = 20_000
+
+ZEE_QUERY = {
+    "input": "events.skim",
+    "output": "zee.skim",
+    "branches": ["Electron_*", "Jet_pt", "MET_*", "run", "event",
+                 "luminosityBlock"],
+    "selection": {
+        "event": [
+            # dilepton invariant-mass window from the two leading electrons
+            {"type": "mass", "collections": ["Electron", "Electron"],
+             "window": [80.0, 100.0]},
+            # leading electron isolated from the leading jet
+            {"type": "deltaR", "collections": ["Electron", "Jet"],
+             "op": ">", "value": 0.4},
+            # arithmetic run-range cut: first ~10% of luminosity blocks
+            {"type": "expr", "expr": "2*luminosityBlock + 0.01*MET_pt",
+             "op": "<", "value": 2.0 * (N_EVENTS // 1000) / 10},
+        ],
+    },
+}
+
+
+def main() -> None:
+    print("== 1. synthesize a NanoAOD-like store ==")
+    store = make_nanoaod_like(N_EVENTS, n_hlt=16, n_filler=8)
+    print(f"   {store.n_events} events x {len(store.branch_names())} branches, "
+          f"{store.compressed_bytes() / 1e6:.1f} MB compressed")
+
+    print("== 2. Z->ee skim through the fused executor ==")
+    engine = SkimEngine(store, input_link=WAN_1G, near_input_link=LOCAL_DISK)
+    res = engine.run(ZEE_QUERY, mode="near_data")
+    print(f"   {res.plan.describe()}")
+    print(f"   passed {res.n_passed}/{res.n_input} events "
+          f"({100 * res.selectivity:.3f}%)")
+
+    print("== 3. expression pushdown: windows proved empty before any fetch ==")
+    ref = engine.run(ZEE_QUERY, mode="near_data", prune=False)
+    assert ref.n_passed == res.n_passed  # bit-identical to the reference
+    pruned = [w for w in res.extras["pruned_windows"] if w[2] == "prune"]
+    print(f"   {len(pruned)} basket windows pruned by interval analysis "
+          f"(mass/deltaR degrade to scan; the linear expr cut carries them)")
+    print(f"   bytes fetched {res.stats.bytes_fetched:,} vs "
+          f"{ref.stats.bytes_fetched:,} unpruned; "
+          f"{res.stats.bytes_skipped:,} proved away")
+
+    print("== 4. era-robust trigger OR ==")
+    mixed = {
+        "branches": ["MET_*", "HLT_*"],
+        "selection": {"event": [
+            {"type": "any",
+             "branches": ["HLT_Mu50_FromAnOlderEra", "HLT_IsoMu24"]},
+        ]},
+    }
+    r = engine.run(mixed, mode="near_data")
+    print(f"   OR over (absent, present) triggers: {r.n_passed} events "
+          f"(absent branch counted as False; strict=True would raise)")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,17 @@ import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
 
-from repro.core.query import AnyOf, Cut, HTCut, ObjectSelection, Query, parse_query
+from repro.core.query import (
+    AnyOf,
+    Cut,
+    DeltaRCut,
+    ExprCut,
+    HTCut,
+    MassWindow,
+    ObjectSelection,
+    Query,
+    parse_query,
+)
 
 # ---------------------------------------------------------------------------
 # canonical query form
@@ -55,6 +65,18 @@ def _node_doc(node) -> list:
             "ht", node.collection, node.var,
             _varcuts_doc(node.object_cuts), node.op, float(node.value),
         ]
+    if isinstance(node, MassWindow):
+        # the leading-pair observables are symmetric in the two
+        # collections (mass and ΔR of (leading A, leading B)), so the
+        # canonical form sorts the pair and reordered queries share a key
+        return ["mass", sorted(node.collections), float(node.lo), float(node.hi)]
+    if isinstance(node, DeltaRCut):
+        return ["deltaR", sorted(node.collections), node.op, float(node.value)]
+    if isinstance(node, ExprCut):
+        # the lowered stack program, not the source text: whitespace and
+        # redundant parens normalize away, every op and constant stays
+        return ["expr", [[op, arg] for op, arg in node.rpn],
+                node.op, float(node.value)]
     raise TypeError(f"unknown AST node {type(node)}")
 
 
@@ -70,6 +92,9 @@ def canonical_query(query: Query | dict | str) -> str:
     doc = {
         "branches": list(q.branches),
         "force_all": bool(q.force_all),
+        # strict changes what a store with missing trigger branches
+        # produces (error vs constant-False), so it addresses content
+        "strict": bool(q.strict),
         "stages": {
             name: sorted(
                 (_node_doc(n) for n in stage), key=lambda d: json.dumps(d)
@@ -89,8 +114,10 @@ def query_hash(query: Query | dict | str) -> str:
 # before the stats upgrade hash differently — the version prefix makes
 # that an explicit, debuggable namespace instead of a silent miss, and
 # re-encoding identical data keeps hitting (stats are deterministic
-# functions of the basket contents).
-CACHE_KEY_VERSION = 2
+# functions of the basket contents).  v3: the canonical query form grew
+# the ``strict`` flag and the derived-expression node docs, changing
+# query hashes for every query.
+CACHE_KEY_VERSION = 3
 
 
 def versioned_key(query_hash_hex: str, manifest_hash: str) -> str:

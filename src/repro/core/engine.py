@@ -599,13 +599,18 @@ class SkimEngine:
             elif fused:
                 # ---- phase 1 (fused path): one pass evaluates the
                 # compiled predicate AND compacts [index]+payload rows ----
-                from repro.core.neardata import fused_window_skim, window_pad_K
+                from repro.core.neardata import (
+                    fused_window_skim,
+                    program_eval_np,
+                    window_pad_K,
+                )
 
                 loaded = preloaded
                 if not plan.filter_branches:
-                    # selection-free skim (pure projection): every event
-                    # survives, nothing to evaluate
-                    mask = np.ones(m, dtype=bool)
+                    # no present branch feeds the predicate: the program is
+                    # constant — all-true for a selection-free projection,
+                    # all-false when only absent-era trigger ORs remain
+                    mask = program_eval_np(loaded or {}, program, m)
                 else:
                     pad_K = max(pad_K, window_pad_K(loaded, program, store))
                     with _Timer(wb, "filter"):

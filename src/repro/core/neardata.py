@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import expr as xpr
 from repro.kernels import ref as kref
 from repro.kernels.predicate_eval import Program, compile_query
 
@@ -95,6 +96,11 @@ def build_padded_inputs(
     values_cache: dict[str, np.ndarray] = {}  # scatter each branch once
 
     def fill_values(target: np.ndarray, branch: str) -> None:
+        if branch not in data:
+            # absent trigger branch (menus differ across eras): the zero
+            # page is constant-False under the ANY-group >= 0.5 test; the
+            # planner guarantees every non-optional branch is present
+            return
         br = store.branches.get(branch)
         if br is not None and br.jagged:
             if branch not in values_cache:
@@ -127,9 +133,24 @@ def build_padded_inputs(
 
     for t, branch in enumerate(program.term_branches):
         fill_values(terms[t], branch)
-    for g, wbranch in enumerate(program.group_weights):
-        anchor = program.term_branches[program.groups[g].term_ids[0]]
-        valid[g] = validity_of(anchor)
+    for g, grp in enumerate(program.groups):
+        if grp.kind in (kref.GROUP_MASS, kref.GROUP_DR):
+            # pair groups read two collections: pack both validity planes
+            # into the one channel (bit0 = first, bit1 = second; a
+            # same-collection pair encodes 3 everywhere it has objects)
+            half = len(grp.term_ids) // 2
+            first = program.term_branches[grp.term_ids[0]]
+            second = program.term_branches[grp.term_ids[half]]
+            valid[g] = validity_of(first) + 2.0 * validity_of(second)
+            continue
+        if grp.kind == kref.GROUP_EXPR:
+            # sum() reductions read the zero-padded object slots directly
+            # (invalid slots are exactly 0.0) — no validity channel
+            continue
+        if grp.term_ids:
+            anchor = program.term_branches[grp.term_ids[0]]
+            valid[g] = validity_of(anchor)
+        wbranch = program.group_weights[g]
         if wbranch is not None:
             fill_values(weights[g], wbranch)
 
@@ -198,9 +219,43 @@ def program_eval_np(
         if grp.kind == kref.GROUP_ANY:
             gpass = np.zeros(n_events, dtype=bool)
             for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
-                gpass |= np.asarray(
-                    _NP_OPS[op](data[program.term_branches[t]], thr), dtype=bool
+                arr = data.get(program.term_branches[t])
+                if arr is None:
+                    continue  # absent trigger branch: constant-False
+                gpass |= np.asarray(_NP_OPS[op](arr, thr), dtype=bool)
+        elif grp.kind == kref.GROUP_MASS:
+            m, ok = xpr.leading_pair_mass(
+                data, coll, program.group_collections2[g]
+            )
+            gpass = ok & (m >= grp.cmp_thr) & (m <= grp.cmp_thr2)
+        elif grp.kind == kref.GROUP_DR:
+            dr, ok = xpr.leading_delta_r(
+                data, coll, program.group_collections2[g]
+            )
+            gpass = ok & np.asarray(
+                _NP_OPS[grp.cmp_op](dr, grp.cmp_thr), dtype=bool
+            )
+        elif grp.kind == kref.GROUP_EXPR:
+            # same stack walk as the staged evaluator (expr.eval_rpn), with
+            # term slots resolved back to branch names — bit-identical to
+            # eval_node by construction
+            def resolve(op, slot):
+                name = program.term_branches[int(slot)]
+                if op == xpr.RPN_BRANCH:
+                    return np.asarray(data[name], dtype=np.float64)
+                counts = np.asarray(
+                    data[xpr.counts_name(name)], dtype=np.int64
                 )
+                return np.bincount(
+                    np.repeat(np.arange(n_events), counts),
+                    weights=np.asarray(data[name], dtype=np.float64),
+                    minlength=n_events,
+                )
+
+            val = xpr.eval_rpn(grp.rpn, resolve)
+            gpass = np.asarray(
+                _NP_OPS[grp.cmp_op](val, grp.cmp_thr), dtype=bool
+            )
         elif coll is None:
             # flat-branch cut compiled as a one-term COUNT group
             t, op, thr = grp.term_ids[0], grp.ops[0], grp.thrs[0]
@@ -217,9 +272,9 @@ def program_eval_np(
                     _NP_OPS[op](data[program.term_branches[t]], thr), dtype=bool
                 )
             if grp.kind == kref.GROUP_COUNT:
-                per_event = np.bincount(
-                    ids, weights=passing.astype(np.float64), minlength=n_events
-                )
+                # integer accumulation — exact counts, matching both the
+                # staged evaluator and the device kernels' int32 path
+                per_event = np.bincount(ids[passing], minlength=n_events)
                 gpass = per_event >= grp.min_count
             else:  # GROUP_HT
                 w = np.asarray(data[program.group_weights[g]], dtype=np.float64)

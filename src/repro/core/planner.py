@@ -13,7 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.branchmap import expand_branches, with_counts_branches
-from repro.core.query import Query
+from repro.core.expr import validate_rpn
+from repro.core.query import ExprCut, Query
 from repro.core.zonemap import SCAN, WindowDecision, classify_windows
 
 
@@ -111,8 +112,20 @@ def plan_skim(
 
     filter_set = {b for b in query.filter_branches() if b in available}
     missing = query.filter_branches() - filter_set
-    if missing:
-        raise KeyError(f"selection references unknown branches: {sorted(missing)}")
+    # trigger-OR names are optional unless the query is strict: menus
+    # differ across data-taking eras, and an absent HLT branch evaluates
+    # as constant-False (mirrored by the zone-map AnyOf analysis)
+    hard_missing = missing - query.optional_branches()
+    # kind mismatches (bare jagged ref, sum() of a flat branch) first:
+    # they subsume the missing-counts KeyError with a specific message
+    for _, stage in query.stages():
+        for node in stage:
+            if isinstance(node, ExprCut):
+                validate_rpn(node.rpn, store, node.source)
+    if hard_missing:
+        raise KeyError(
+            f"selection references unknown branches: {sorted(hard_missing)}"
+        )
     filter_branches = with_counts_branches(sorted(filter_set), store)
 
     selected, excluded = expand_branches(

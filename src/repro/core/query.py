@@ -23,7 +23,13 @@ declarative JSON document::
            "object_cuts": [{"var": "pt", "op": ">", "value": 30.0}],
            "op": ">", "value": 200.0},
           {"type": "any", "branches": ["HLT_IsoMu24"]},
-          {"type": "cut", "branch": "MET_pt", "op": ">", "value": 40.0}
+          {"type": "cut", "branch": "MET_pt", "op": ">", "value": 40.0},
+          {"type": "mass", "collections": ["Electron", "Electron"],
+           "window": [80.0, 100.0]},
+          {"type": "deltaR", "collections": ["Electron", "Jet"],
+           "op": ">", "value": 0.4},
+          {"type": "expr", "expr": "MET_pt + 0.5*sum(Jet_pt)",
+           "op": ">", "value": 150.0}
         ]
       }
     }
@@ -31,9 +37,15 @@ declarative JSON document::
 The three selection tiers map to the paper's hierarchical model:
 *preselection* (cheap single-branch cuts), *object-level* (per-particle
 kinematic cuts over jagged collections), *event-level* (composite derived
-variables such as HT, trigger ORs).  Stages run in order and events are
-discarded as early as possible (basket-granular short-circuiting in the
-engine).
+variables such as HT, trigger ORs, and the derived-kinematics tier:
+leading-pair invariant-mass windows, ΔR, and arithmetic expressions over
+flat branches and ``sum()`` reductions — DESIGN.md §10).  Stages run in
+order and events are discarded as early as possible (basket-granular
+short-circuiting in the engine).
+
+Trigger menus differ across data-taking eras, so ``any`` nodes treat
+branches absent from a store as constant-False by default;
+``parse_query(..., strict=True)`` restores hard validation.
 """
 
 from __future__ import annotations
@@ -42,6 +54,15 @@ import json
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from repro.core.expr import (
+    KINEMATIC_VARS,
+    compile_expr,
+    eval_expr_np,
+    leading_delta_r,
+    leading_pair_mass,
+    rpn_branches,
+)
 
 OPS = {
     ">": lambda x, v: x > v,
@@ -110,12 +131,71 @@ class HTCut:
 
 @dataclass(frozen=True)
 class AnyOf:
-    """Event tier: OR of boolean branches (trigger conditions)."""
+    """Event tier: OR of boolean branches (trigger conditions).
+
+    Branches absent from the store under evaluation contribute
+    constant-False (menus differ across eras); ``Query.strict`` restores
+    the hard ``KeyError``.  The zone-map analysis mirrors the same
+    semantics so pruning stays bit-identical.
+    """
 
     names: tuple[str, ...]
 
     def branches(self) -> set[str]:
         return set(self.names)
+
+
+@dataclass(frozen=True)
+class MassWindow:
+    """Event tier: leading-pair invariant mass inside ``[lo, hi]``.
+
+    The pair is the two highest-``pt`` objects of a same-collection pair,
+    or each collection's leading object otherwise; events without a full
+    pair fail.  Bounds are inclusive."""
+
+    collections: tuple[str, str]
+    lo: float
+    hi: float
+
+    def branches(self) -> set[str]:
+        out: set[str] = set()
+        for c in set(self.collections):
+            out.add(f"n{c}")
+            out |= {f"{c}_{v}" for v in KINEMATIC_VARS["mass"]}
+        return out
+
+
+@dataclass(frozen=True)
+class DeltaRCut:
+    """Event tier: ΔR between the leading pair, compared to a threshold.
+
+    Events without a full pair fail regardless of the operator."""
+
+    collections: tuple[str, str]
+    op: str
+    value: float
+
+    def branches(self) -> set[str]:
+        out: set[str] = set()
+        for c in set(self.collections):
+            out.add(f"n{c}")
+            out |= {f"{c}_{v}" for v in KINEMATIC_VARS["deltaR"]}
+        return out
+
+
+@dataclass(frozen=True)
+class ExprCut:
+    """Event tier: arithmetic expression over flat branches and ``sum()``
+    reductions, compared to a threshold (float64 host semantics;
+    ``repro.core.expr``)."""
+
+    source: str  # original expression text (repr / error messages)
+    rpn: tuple  # branch-name stack program from expr.compile_expr
+    op: str
+    value: float
+
+    def branches(self) -> set[str]:
+        return rpn_branches(self.rpn)
 
 
 Stage = tuple  # tuple of AST nodes evaluated with logical AND
@@ -130,6 +210,9 @@ class Query:
     preselection: tuple = ()
     object_stage: tuple = ()
     event_stage: tuple = ()
+    # strict=True restores the hard KeyError for trigger-OR branches the
+    # store does not carry (the pre-era-robustness behavior)
+    strict: bool = False
     meta: dict = field(default_factory=dict)
 
     def stages(self) -> list[tuple[str, tuple]]:
@@ -156,13 +239,30 @@ class Query:
                 return out
         raise KeyError(stage_name)
 
+    def optional_branches(self) -> set[str]:
+        """Branches a store may legitimately lack: trigger-OR names, which
+        evaluate as constant-False when absent (unless ``strict``)."""
+        if self.strict:
+            return set()
+        out: set[str] = set()
+        for _, stage in self.stages():
+            for node in stage:
+                if isinstance(node, AnyOf):
+                    out |= set(node.names)
+        return out
+
 
 def _parse_varcuts(items) -> tuple[VarCut, ...]:
     return tuple(VarCut(c["var"], c["op"], c["value"]) for c in items)
 
 
-def parse_query(doc: dict | str) -> Query:
-    """Parse a JSON query document (dict or JSON string) into a :class:`Query`."""
+def parse_query(doc: dict | str, strict: bool = False) -> Query:
+    """Parse a JSON query document (dict or JSON string) into a :class:`Query`.
+
+    ``strict=True`` (or ``"strict": true`` in the document) makes trigger
+    branches listed in ``any`` nodes but absent from the target store a
+    hard planning error instead of constant-False.
+    """
     if isinstance(doc, str):
         doc = json.loads(doc)
     sel = doc.get("selection", {})
@@ -193,11 +293,27 @@ def parse_query(doc: dict | str) -> Query:
                     e["value"],
                 )
             )
+        elif kind == "mass":
+            colls = tuple(e["collections"])
+            if len(colls) != 2:
+                raise ValueError("mass node needs exactly two collections")
+            lo, hi = e["window"]
+            events.append(MassWindow(colls, float(lo), float(hi)))
+        elif kind == "deltaR":
+            colls = tuple(e["collections"])
+            if len(colls) != 2:
+                raise ValueError("deltaR node needs exactly two collections")
+            events.append(DeltaRCut(colls, e.get("op", ">"), float(e["value"])))
+        elif kind == "expr":
+            events.append(
+                ExprCut(e["expr"], compile_expr(e["expr"]), e["op"],
+                        float(e["value"]))
+            )
         else:
             raise ValueError(f"unknown event-cut type: {kind}")
 
     for op_node in presel + tuple(events):
-        if isinstance(op_node, Cut) and op_node.op not in OPS:
+        if isinstance(op_node, (Cut, DeltaRCut, ExprCut)) and op_node.op not in OPS:
             raise ValueError(f"unknown op {op_node.op}")
 
     return Query(
@@ -208,8 +324,10 @@ def parse_query(doc: dict | str) -> Query:
         preselection=presel,
         object_stage=objs,
         event_stage=tuple(events),
+        strict=bool(doc.get("strict", strict)),
         meta={k: v for k, v in doc.items() if k not in
-              ("input", "output", "branches", "force_all", "selection")},
+              ("input", "output", "branches", "force_all", "selection",
+               "strict")},
     )
 
 
@@ -222,20 +340,38 @@ def _event_ids(counts: np.ndarray) -> np.ndarray:
     return np.repeat(np.arange(len(counts)), counts)
 
 
-def eval_node(node, data: dict) -> np.ndarray:
+def eval_node(node, data: dict, n_events: int | None = None) -> np.ndarray:
     """Evaluate one AST node -> boolean mask over events.
 
     ``data`` maps flat branch name -> (n_events,) array and jagged branch
     name -> values array, with counts available under the ``n<Collection>``
-    name.
+    name.  ``any`` names missing from ``data`` contribute constant-False
+    (absent-era triggers); ``n_events`` sizes the mask when *every* name
+    is missing (``eval_stage`` always passes it).
     """
     if isinstance(node, Cut):
         return np.asarray(OPS[node.op](data[node.branch], node.value), dtype=bool)
     if isinstance(node, AnyOf):
-        mask = np.zeros_like(np.asarray(data[node.names[0]], dtype=bool))
-        for n in node.names:
+        present = [n for n in node.names if n in data]
+        if not present:
+            if n_events is None:
+                raise KeyError(
+                    f"AnyOf{node.names}: no branch present and n_events unknown"
+                )
+            return np.zeros(n_events, dtype=bool)
+        mask = np.zeros_like(np.asarray(data[present[0]], dtype=bool))
+        for n in present:
             mask |= np.asarray(data[n], dtype=bool)
         return mask
+    if isinstance(node, MassWindow):
+        m, ok = leading_pair_mass(data, *node.collections)
+        return ok & (m >= node.lo) & (m <= node.hi)
+    if isinstance(node, DeltaRCut):
+        dr, ok = leading_delta_r(data, *node.collections)
+        return ok & np.asarray(OPS[node.op](dr, node.value), dtype=bool)
+    if isinstance(node, ExprCut):
+        val = eval_expr_np(node.rpn, data)
+        return np.asarray(OPS[node.op](val, node.value), dtype=bool)
     if isinstance(node, ObjectSelection):
         counts = np.asarray(data[f"n{node.collection}"], dtype=np.int64)
         passing = None
@@ -245,8 +381,11 @@ def eval_node(node, data: dict) -> np.ndarray:
             passing = m if passing is None else (passing & m)
         if passing is None:
             passing = np.ones(int(counts.sum()), dtype=bool)
+        # integer accumulation: count semantics are exact and match the
+        # fused kernel's int32 path (float64 counting was exact too, but
+        # only incidentally — the comparison belongs in integers)
         per_event = np.bincount(
-            _event_ids(counts), weights=passing.astype(np.float64), minlength=len(counts)
+            _event_ids(counts)[passing], minlength=len(counts)
         )
         return per_event >= node.min_count
     if isinstance(node, HTCut):
@@ -266,5 +405,5 @@ def eval_node(node, data: dict) -> np.ndarray:
 def eval_stage(stage: tuple, data: dict, n_events: int) -> np.ndarray:
     mask = np.ones(n_events, dtype=bool)
     for node in stage:
-        mask &= eval_node(node, data)
+        mask &= eval_node(node, data, n_events)
     return mask

@@ -32,6 +32,15 @@ heuristic:
 
 Unknown statistics (legacy stores, non-finite data) always degrade to
 SCAN.
+
+The derived-expression tier (DESIGN.md §10) classifies through **interval
+arithmetic over the expression tree**: +, −, ×, ÷ (nonzero divisor),
+abs/neg/min/max propagate window bounds exactly (float64 endpoint ops are
+monotone; one-ulp outward rounding is applied anyway as slack), ``sum()``
+reductions reuse the HT accumulation-slack bound, and the nonlinear
+leading-pair nodes (invariant mass, ΔR) degrade to SCAN.  Trigger-OR
+branches *absent from the store* contribute constant-False — mirroring
+the evaluator's era-robust ``AnyOf`` semantics bit-for-bit.
 """
 
 from __future__ import annotations
@@ -40,7 +49,30 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.query import AnyOf, Cut, HTCut, ObjectSelection, Query
+from repro.core.expr import (
+    RPN_ABS,
+    RPN_ADD,
+    RPN_BRANCH,
+    RPN_CONST,
+    RPN_DIV,
+    RPN_MAX,
+    RPN_MIN,
+    RPN_MUL,
+    RPN_NEG,
+    RPN_SUB,
+    RPN_SUM,
+    counts_name,
+)
+from repro.core.query import (
+    AnyOf,
+    Cut,
+    DeltaRCut,
+    ExprCut,
+    HTCut,
+    MassWindow,
+    ObjectSelection,
+    Query,
+)
 
 # window decisions
 PRUNE = "prune"
@@ -146,14 +178,20 @@ def _classify_cut(node: Cut, stats_of, store) -> int:
     return _cmp_interval(lo, hi, node.op, _effective_threshold(node.value, dt))
 
 
-def _classify_anyof(node: AnyOf, stats_of) -> int:
+def _classify_anyof(node: AnyOf, stats_of, store) -> int:
     """OR of boolean branches: ALWAYS if some branch is all-true in the
-    window, NEVER only if every branch is provably all-false."""
+    window, NEVER only if every branch is provably all-false.
+
+    A branch *absent from the store* is constant-False by the evaluator's
+    era-robust semantics — it contributes nothing and cannot block a
+    NEVER.  A branch that is present but lacks stats might fire."""
     all_false = True
     for name in node.names:
+        if name not in store.branches:
+            continue  # absent trigger: definitively all-false
         st = stats_of(name)
         if st is None or st.n_true is None:
-            all_false = False  # unknown branch might fire
+            all_false = False  # unknown stats might fire
             continue
         if st.n_values > 0 and st.n_true == st.n_values:
             return ALWAYS
@@ -234,17 +272,125 @@ def _classify_ht(node: HTCut, stats_of, store) -> int:
     return _cmp_interval(ht_lo, ht_hi, node.op, float(node.value))
 
 
+# ---------------------------------------------------------------------------
+# expression interval arithmetic (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# float64 unit roundoff; the HT/sum accumulation-slack constant
+_ULP = 1.11e-16
+
+
+def _outward(lo: float, hi: float) -> tuple[float, float]:
+    """One-ulp outward rounding slack after an inexact float64 op.
+
+    Endpoint arithmetic is already conservative (IEEE rounding is
+    monotone, so pointwise float64 results stay inside the float64
+    endpoint interval), but the extra ulp keeps the bound safe against
+    any non-monotone refactor of the evaluator."""
+    return float(np.nextafter(lo, -np.inf)), float(np.nextafter(hi, np.inf))
+
+
+def _sum_interval(branch: str, stats_of, store):
+    """Bounds of the per-event float64 ``sum(branch)`` reduction, or None.
+
+    Mirrors the HT bound: per-event count in [cmin, cmax], every value in
+    [vlo, vhi], widened by the rigorous float64 accumulation slack."""
+    cst = stats_of(counts_name(branch))
+    if cst is None or cst.lo is None or cst.hi is None:
+        return None
+    cmin, cmax = int(cst.lo), int(cst.hi)
+    if cmax == 0:
+        return 0.0, 0.0  # no objects anywhere: the sum is exactly 0.0
+    iv = _branch_interval(stats_of, branch, store)
+    if iv is None:
+        return None
+    vlo, vhi, _ = iv
+    cands = (cmin * vlo, cmax * vlo, cmin * vhi, cmax * vhi)
+    maxabs = max(abs(vlo), abs(vhi))
+    slack = max(1e-12, 32 * _ULP * cmax * cmax * maxabs)
+    return min(cands) - slack, max(cands) + slack
+
+
+def _expr_interval(rpn, stats_of, store):
+    """(lo, hi) bounds of a branch-name RPN over the window, or None.
+
+    Any unknown input (missing stats, absent branch), a divisor interval
+    straddling zero, or a non-finite endpoint poisons the whole
+    expression — degrading to SCAN, never to a wrong skip."""
+    stack: list[tuple[float, float]] = []
+    for op, arg in rpn:
+        if op == RPN_BRANCH:
+            iv = _branch_interval(stats_of, str(arg), store)
+            if iv is None:
+                return None
+            stack.append((iv[0], iv[1]))
+        elif op == RPN_SUM:
+            iv = _sum_interval(str(arg), stats_of, store)
+            if iv is None:
+                return None
+            stack.append(iv)
+        elif op == RPN_CONST:
+            stack.append((float(arg), float(arg)))
+        elif op == RPN_NEG:
+            lo, hi = stack.pop()
+            stack.append((-hi, -lo))
+        elif op == RPN_ABS:
+            stack.append(_abs_interval(*stack.pop()))
+        else:
+            blo, bhi = stack.pop()
+            alo, ahi = stack.pop()
+            if op == RPN_ADD:
+                lo, hi = _outward(alo + blo, ahi + bhi)
+            elif op == RPN_SUB:
+                lo, hi = _outward(alo - bhi, ahi - blo)
+            elif op == RPN_MUL:
+                c = (alo * blo, alo * bhi, ahi * blo, ahi * bhi)
+                lo, hi = _outward(min(c), max(c))
+            elif op == RPN_DIV:
+                if blo <= 0.0 <= bhi:
+                    return None  # divisor may vanish: unbounded
+                c = (alo / blo, alo / bhi, ahi / blo, ahi / bhi)
+                lo, hi = _outward(min(c), max(c))
+            elif op == RPN_MIN:
+                lo, hi = min(alo, blo), min(ahi, bhi)
+            elif op == RPN_MAX:
+                lo, hi = max(alo, blo), max(ahi, bhi)
+            else:
+                return None  # unknown op: never skip on guesswork
+            stack.append((lo, hi))
+        lo, hi = stack[-1]
+        if not (np.isfinite(lo) and np.isfinite(hi)):
+            return None
+    (result,) = stack
+    return result
+
+
+def _classify_expr(node: ExprCut, stats_of, store) -> int:
+    iv = _expr_interval(node.rpn, stats_of, store)
+    if iv is None:
+        return MAYBE
+    # the evaluator compares the float64 expression value against the
+    # python-float threshold exactly — no float32 threshold rounding here
+    return _cmp_interval(iv[0], iv[1], node.op, float(node.value))
+
+
 def classify_node(node, stats_of, store) -> int:
     """Tri-state of one AST node over a window described by ``stats_of``
     (a callable ``branch -> ZoneStats | None``)."""
     if isinstance(node, Cut):
         return _classify_cut(node, stats_of, store)
     if isinstance(node, AnyOf):
-        return _classify_anyof(node, stats_of)
+        return _classify_anyof(node, stats_of, store)
     if isinstance(node, ObjectSelection):
         return _classify_object(node, stats_of, store)
     if isinstance(node, HTCut):
         return _classify_ht(node, stats_of, store)
+    if isinstance(node, ExprCut):
+        return _classify_expr(node, stats_of, store)
+    if isinstance(node, (MassWindow, DeltaRCut)):
+        # nonlinear leading-pair kinematics: window bounds on pt/eta/phi
+        # do not bound the pair observable tightly enough to skip safely
+        return MAYBE
     return MAYBE  # unknown node types never authorize a skip
 
 

@@ -20,12 +20,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.expr import KINEMATIC_VARS, RPN_BRANCH, RPN_SUM
 from repro.kernels.ref import (
     GROUP_ANY,
     GROUP_COUNT,
+    GROUP_DR,
+    GROUP_EXPR,
     GROUP_HT,
+    GROUP_MASS,
     OP_IDS,
-    apply_op,
+    predicate_mask,
 )
 
 EVENT_TILE = 1024  # events per grid step; multiple of 8*128 lanes
@@ -33,13 +37,15 @@ EVENT_TILE = 1024  # events per grid step; multiple of 8*128 lanes
 
 @dataclass(frozen=True)
 class Group:
-    kind: int  # GROUP_COUNT / GROUP_HT / GROUP_ANY
+    kind: int  # GROUP_COUNT / GROUP_HT / GROUP_ANY / GROUP_MASS / ...
     term_ids: tuple[int, ...]
     ops: tuple[int, ...]
     thrs: tuple[float, ...]
     min_count: int = 1
     cmp_op: int = 0
     cmp_thr: float = 0.0
+    cmp_thr2: float = 0.0  # mass window upper bound (GROUP_MASS)
+    rpn: tuple = ()  # GROUP_EXPR stack program, term-slot operands
 
 
 @dataclass(frozen=True)
@@ -50,6 +56,9 @@ class Program:
     term_branches: tuple[str, ...]  # branch feeding each term slot
     group_collections: tuple[str | None, ...]  # validity source per group
     group_weights: tuple[str | None, ...]  # HT weight branch per group
+    # second collection of mass/ΔR pair groups (None elsewhere); default ()
+    # keeps hand-built three-field programs (tests, older callers) valid
+    group_collections2: tuple = ()
 
     @property
     def n_terms(self) -> int:
@@ -61,51 +70,67 @@ class Program:
 
 
 def compile_query(query) -> Program:
-    """Lower a :class:`repro.core.query.Query` to a :class:`Program`."""
-    from repro.core.query import AnyOf, Cut, HTCut, ObjectSelection
+    """Lower a :class:`repro.core.query.Query` to a :class:`Program`.
+
+    Compilation is store-independent (the cluster coordinator compiles
+    once and fans out to shards with possibly different schemas): trigger
+    branches absent from a store evaluate as constant-False at ingest
+    (zero term pages), not here.
+    """
+    from repro.core.query import (
+        AnyOf,
+        Cut,
+        DeltaRCut,
+        ExprCut,
+        HTCut,
+        MassWindow,
+        ObjectSelection,
+    )
 
     term_branches: list[str] = []
     groups: list[Group] = []
     group_colls: list[str | None] = []
+    group_colls2: list[str | None] = []
     group_weights: list[str | None] = []
 
     def add_term(branch: str) -> int:
         term_branches.append(branch)
         return len(term_branches) - 1
 
+    def add_group(group: Group, coll=None, coll2=None, weight=None) -> None:
+        groups.append(group)
+        group_colls.append(coll)
+        group_colls2.append(coll2)
+        group_weights.append(weight)
+
     for _, stage in query.stages():
         for node in stage:
             if isinstance(node, Cut):
                 t = add_term(node.branch)
-                groups.append(
+                add_group(
                     Group(GROUP_COUNT, (t,), (OP_IDS[node.op],), (float(node.value),))
                 )
-                group_colls.append(None)
-                group_weights.append(None)
             elif isinstance(node, AnyOf):
                 ids = tuple(add_term(n) for n in node.names)
-                groups.append(
+                add_group(
                     Group(GROUP_ANY, ids, (OP_IDS[">="],) * len(ids), (0.5,) * len(ids))
                 )
-                group_colls.append(None)
-                group_weights.append(None)
             elif isinstance(node, ObjectSelection):
                 ids, ops, thrs = [], [], []
                 for c in node.cuts:
                     ids.append(add_term(f"{node.collection}_{c.var}"))
                     ops.append(OP_IDS[c.op])
                     thrs.append(float(c.value))
-                groups.append(
+                add_group(
                     Group(
                         GROUP_COUNT,
                         tuple(ids),
                         tuple(ops),
                         tuple(thrs),
                         min_count=node.min_count,
-                    )
+                    ),
+                    coll=node.collection,
                 )
-                group_colls.append(node.collection)
-                group_weights.append(None)
             elif isinstance(node, HTCut):
                 ids, ops, thrs = [], [], []
                 for c in node.object_cuts:
@@ -116,7 +141,7 @@ def compile_query(query) -> Program:
                     ids.append(add_term(f"{node.collection}_{node.var}"))
                     ops.append(OP_IDS[">="])
                     thrs.append(-jnp.inf)
-                groups.append(
+                add_group(
                     Group(
                         GROUP_HT,
                         tuple(ids),
@@ -124,15 +149,66 @@ def compile_query(query) -> Program:
                         tuple(thrs),
                         cmp_op=OP_IDS[node.op],
                         cmp_thr=float(node.value),
+                    ),
+                    coll=node.collection,
+                    weight=f"{node.collection}_{node.var}",
+                )
+            elif isinstance(node, MassWindow):
+                a, b = node.collections
+                ids = tuple(
+                    add_term(f"{c}_{v}")
+                    for c in (a, b)
+                    for v in KINEMATIC_VARS["mass"]
+                )
+                add_group(
+                    Group(
+                        GROUP_MASS, ids, (), (),
+                        cmp_thr=float(node.lo), cmp_thr2=float(node.hi),
+                    ),
+                    coll=a, coll2=b,
+                )
+            elif isinstance(node, DeltaRCut):
+                a, b = node.collections
+                ids = tuple(
+                    add_term(f"{c}_{v}")
+                    for c in (a, b)
+                    for v in KINEMATIC_VARS["deltaR"]
+                )
+                add_group(
+                    Group(
+                        GROUP_DR, ids, (), (),
+                        cmp_op=OP_IDS[node.op], cmp_thr=float(node.value),
+                    ),
+                    coll=a, coll2=b,
+                )
+            elif isinstance(node, ExprCut):
+                # rewrite branch-name operands to term slots; sums read the
+                # zero-padded object slots, flat refs read slot 0
+                rpn = []
+                ids = []
+                for op, arg in node.rpn:
+                    if op in (RPN_BRANCH, RPN_SUM):
+                        t = add_term(str(arg))
+                        ids.append(t)
+                        rpn.append((op, t))
+                    else:
+                        rpn.append((op, arg))
+                add_group(
+                    Group(
+                        GROUP_EXPR, tuple(ids), (), (),
+                        cmp_op=OP_IDS[node.op], cmp_thr=float(node.value),
+                        rpn=tuple(rpn),
                     )
                 )
-                group_colls.append(node.collection)
-                group_weights.append(f"{node.collection}_{node.var}")
             else:
                 raise TypeError(f"cannot compile node {type(node)}")
 
     return Program(
-        tuple(groups), tuple(term_branches), tuple(group_colls), tuple(group_weights)
+        tuple(groups),
+        tuple(term_branches),
+        tuple(group_colls),
+        tuple(group_weights),
+        tuple(group_colls2),
     )
 
 
@@ -142,24 +218,15 @@ def compile_query(query) -> Program:
 
 
 def _predicate_kernel(terms_ref, valid_ref, weights_ref, out_ref, *, program: Program):
-    """One event tile: terms (T, Eb, K), valid (G, Eb, K), weights (G, Eb, K)."""
-    mask = jnp.ones((terms_ref.shape[1],), dtype=jnp.bool_)
-    for g, grp in enumerate(program.groups):
-        if grp.kind == GROUP_ANY:
-            gpass = jnp.zeros_like(mask)
-            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
-                gpass = gpass | apply_op(terms_ref[t, :, 0], op, thr)
-        else:
-            obj = jnp.ones(terms_ref.shape[1:], dtype=jnp.bool_)  # (Eb, K)
-            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
-                obj = obj & apply_op(terms_ref[t], op, thr)
-            obj = obj & (valid_ref[g] > 0)
-            if grp.kind == GROUP_COUNT:
-                gpass = obj.astype(jnp.int32).sum(axis=-1) >= grp.min_count
-            else:  # GROUP_HT
-                ht = (weights_ref[g] * obj.astype(jnp.float32)).sum(axis=-1)
-                gpass = apply_op(ht, grp.cmp_op, grp.cmp_thr)
-        mask = mask & gpass
+    """One event tile: terms (T, Eb, K), valid (G, Eb, K), weights (G, Eb, K).
+
+    The evaluation body is :func:`repro.kernels.ref.predicate_mask` — one
+    implementation shared with the oracle and the fused kernel, so every
+    group kind (count/HT/trigger-OR/mass/ΔR/expr) behaves identically
+    across the three."""
+    mask = predicate_mask(
+        program, terms_ref[...], valid_ref[...], weights_ref[...]
+    )
     out_ref[...] = mask.astype(jnp.int32)
 
 

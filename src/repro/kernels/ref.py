@@ -10,6 +10,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.expr import (
+    RPN_ABS,
+    RPN_ADD,
+    RPN_BRANCH,
+    RPN_CONST,
+    RPN_DIV,
+    RPN_MAX,
+    RPN_MIN,
+    RPN_MUL,
+    RPN_NEG,
+    RPN_SUB,
+    RPN_SUM,
+)
+
 # ---------------------------------------------------------------------------
 # predicate_eval
 # ---------------------------------------------------------------------------
@@ -30,6 +44,9 @@ OP_IDS = {
 GROUP_COUNT = 0  # count of objects passing all terms >= min_count
 GROUP_HT = 1  # sum(weight * passing) cmp threshold
 GROUP_ANY = 2  # OR over terms (flat boolean branches)
+GROUP_MASS = 3  # leading-pair invariant mass inside [cmp_thr, cmp_thr2]
+GROUP_DR = 4  # leading-pair ΔR cmp threshold
+GROUP_EXPR = 5  # arithmetic stack program (Group.rpn) cmp threshold
 
 
 def apply_op(x, op_id: int, thr: float):
@@ -52,16 +69,135 @@ def apply_op(x, op_id: int, thr: float):
     raise ValueError(op_id)
 
 
-def predicate_eval_ref(terms, valid, weights, program) -> jnp.ndarray:
-    """Evaluate a compiled predicate program.
+def _lead_onehot(masked_pt: jnp.ndarray) -> jnp.ndarray:
+    """(E, K) one-hot of each event's first maximal slot (ties -> lowest
+    slot, i.e. storage order — the host lexsort tiebreak)."""
+    i1 = jnp.argmax(masked_pt, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, masked_pt.shape, 1)
+    return iota == i1[:, None]
+
+
+def _pair_onehots(pt_a, va, pt_b, vb, same: bool):
+    """Leading-pair selection: (oh1, oh2, ok).  Same-collection pairs take
+    the two highest-pt objects of A; otherwise each collection's leading
+    object.  ``ok`` marks events with a full pair (selection one-hots are
+    garbage where it is False)."""
+    neg = jnp.float32(-jnp.inf)
+    ma = jnp.where(va, pt_a, neg)
+    oh1 = _lead_onehot(ma)
+    if same:
+        oh2 = _lead_onehot(jnp.where(oh1, neg, ma))
+        ok = va.astype(jnp.int32).sum(axis=-1) >= 2
+    else:
+        oh2 = _lead_onehot(jnp.where(vb, pt_b, neg))
+        ok = (va.astype(jnp.int32).sum(axis=-1) >= 1) & (
+            vb.astype(jnp.int32).sum(axis=-1) >= 1
+        )
+    return oh1, oh2, ok
+
+
+def _sel(x: jnp.ndarray, onehot: jnp.ndarray) -> jnp.ndarray:
+    """Select the one-hot slot of each event row: (E, K) -> (E,)."""
+    return jnp.where(onehot, x, 0.0).sum(axis=-1)
+
+
+def _unpack_validity(vg: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mass/ΔR groups pack two collections' validity planes into one float
+    channel: bit0 = first collection, bit1 = second (values 0..3)."""
+    return jnp.mod(vg, 2.0) >= 1.0, vg >= 2.0
+
+
+def _p4(pt, eta, phi, mass):
+    """(px, py, pz, E) from detector coordinates — mirrored term-for-term
+    by the float64 host helper (repro.core.expr.leading_pair_mass)."""
+    px = pt * jnp.cos(phi)
+    py = pt * jnp.sin(phi)
+    pz = pt * jnp.sinh(eta)
+    ch = jnp.cosh(eta)
+    e = jnp.sqrt(mass * mass + pt * pt * ch * ch)
+    return px, py, pz, e
+
+
+def _group_mass(grp, terms, vg, same: bool):
+    ids = grp.term_ids  # (ptA, etaA, phiA, massA, ptB, etaB, phiB, massB)
+    va, vb = _unpack_validity(vg)
+    oh1, oh2, ok = _pair_onehots(terms[ids[0]], va, terms[ids[4]], vb, same)
+    px1, py1, pz1, e1 = _p4(*(_sel(terms[i], oh1) for i in ids[:4]))
+    px2, py2, pz2, e2 = _p4(*(_sel(terms[i], oh2) for i in ids[4:]))
+    m2 = (
+        (e1 + e2) * (e1 + e2)
+        - (px1 + px2) * (px1 + px2)
+        - (py1 + py2) * (py1 + py2)
+        - (pz1 + pz2) * (pz1 + pz2)
+    )
+    mass = jnp.sqrt(jnp.maximum(m2, 0.0))
+    return ok & (mass >= grp.cmp_thr) & (mass <= grp.cmp_thr2)
+
+
+def _group_dr(grp, terms, vg, same: bool):
+    ids = grp.term_ids  # (ptA, etaA, phiA, ptB, etaB, phiB)
+    va, vb = _unpack_validity(vg)
+    oh1, oh2, ok = _pair_onehots(terms[ids[0]], va, terms[ids[3]], vb, same)
+    deta = _sel(terms[ids[1]], oh1) - _sel(terms[ids[4]], oh2)
+    pi = jnp.float32(np.pi)
+    dphi = jnp.mod(
+        _sel(terms[ids[2]], oh1) - _sel(terms[ids[5]], oh2) + pi, 2.0 * pi
+    ) - pi
+    dr = jnp.sqrt(deta * deta + dphi * dphi)
+    return ok & apply_op(dr, grp.cmp_op, grp.cmp_thr)
+
+
+def _group_expr(grp, terms):
+    """Stack-program evaluation over term slots: flat branches read slot 0,
+    sum() reductions sum the zero-padded slots (invalid slots are exactly
+    0.0 by the ingest contract, so no validity channel is needed)."""
+    stack: list = []
+    for op, arg in grp.rpn:
+        if op == RPN_BRANCH:
+            stack.append(terms[int(arg)][:, 0])
+        elif op == RPN_SUM:
+            stack.append(terms[int(arg)].sum(axis=-1))
+        elif op == RPN_CONST:
+            stack.append(jnp.float32(arg))
+        elif op == RPN_NEG:
+            stack.append(-stack.pop())
+        elif op == RPN_ABS:
+            stack.append(jnp.abs(stack.pop()))
+        else:
+            b = stack.pop()
+            a = stack.pop()
+            if op == RPN_ADD:
+                stack.append(a + b)
+            elif op == RPN_SUB:
+                stack.append(a - b)
+            elif op == RPN_MUL:
+                stack.append(a * b)
+            elif op == RPN_DIV:
+                stack.append(a / b)
+            elif op == RPN_MIN:
+                stack.append(jnp.minimum(a, b))
+            elif op == RPN_MAX:
+                stack.append(jnp.maximum(a, b))
+            else:
+                raise ValueError(f"unknown RPN op {op}")
+    return apply_op(stack[-1], grp.cmp_op, grp.cmp_thr)
+
+
+def _coll2(program, g: int):
+    c2 = getattr(program, "group_collections2", ())
+    return c2[g] if c2 else None
+
+
+def predicate_mask(program, terms, valid, weights) -> jnp.ndarray:
+    """Evaluate a compiled predicate program (the single body shared by
+    this oracle, the Pallas predicate kernel, and the fused kernel).
 
     Args:
       terms:   (T, E, K) float32 — per-term padded values.
-      valid:   (G, E, K) bool/float — per-group object validity.
+      valid:   (G, E, K) float — per-group object validity (mass/ΔR groups
+               carry two packed planes, see ``_unpack_validity``).
       weights: (G, E, K) float32 — per-group HT weights (zeros if unused).
-      program: static description (see kernels.predicate_eval.Program):
-        groups: list of dicts with keys kind, term_ids, ops, thrs,
-                min_count, cmp_op, cmp_thr.
+      program: static description (see kernels.predicate_eval.Program).
     Returns: (E,) bool event mask.
     """
     E = terms.shape[1]
@@ -71,13 +207,19 @@ def predicate_eval_ref(terms, valid, weights, program) -> jnp.ndarray:
             gpass = jnp.zeros((E,), dtype=bool)
             for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
                 gpass = gpass | apply_op(terms[t, :, 0], op, thr)
+        elif grp.kind == GROUP_EXPR:
+            gpass = _group_expr(grp, terms)
+        elif grp.kind in (GROUP_MASS, GROUP_DR):
+            same = program.group_collections[g] == _coll2(program, g)
+            fn = _group_mass if grp.kind == GROUP_MASS else _group_dr
+            gpass = fn(grp, terms, valid[g], same)
         else:
             obj = jnp.ones(terms.shape[1:], dtype=bool)  # (E, K)
             for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
                 obj = obj & apply_op(terms[t], op, thr)
             obj = obj & (valid[g] > 0)
             if grp.kind == GROUP_COUNT:
-                gpass = obj.sum(axis=-1) >= grp.min_count
+                gpass = obj.astype(jnp.int32).sum(axis=-1) >= grp.min_count
             elif grp.kind == GROUP_HT:
                 ht = (weights[g] * obj.astype(jnp.float32)).sum(axis=-1)
                 gpass = apply_op(ht, grp.cmp_op, grp.cmp_thr)
@@ -85,6 +227,11 @@ def predicate_eval_ref(terms, valid, weights, program) -> jnp.ndarray:
                 raise ValueError(grp.kind)
         mask = mask & gpass
     return mask
+
+
+def predicate_eval_ref(terms, valid, weights, program) -> jnp.ndarray:
+    """Oracle alias of :func:`predicate_mask` (the semantics of record)."""
+    return predicate_mask(program, terms, valid, weights)
 
 
 # ---------------------------------------------------------------------------

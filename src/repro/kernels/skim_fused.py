@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.predicate_eval import Program
-from repro.kernels.ref import GROUP_ANY, GROUP_COUNT, apply_op
+from repro.kernels.ref import predicate_mask
 
 EVENT_TILE = 512
 
@@ -35,24 +35,10 @@ EVENT_TILE = 512
 def _fused_kernel(terms_ref, valid_ref, weights_ref, payload_ref,
                   out_ref, count_ref, *, program: Program):
     Eb = payload_ref.shape[0]
-    # --- predicate (same body as predicate_eval) ---
-    mask = jnp.ones((Eb,), dtype=jnp.bool_)
-    for g, grp in enumerate(program.groups):
-        if grp.kind == GROUP_ANY:
-            gpass = jnp.zeros_like(mask)
-            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
-                gpass = gpass | apply_op(terms_ref[t, :, 0], op, thr)
-        else:
-            obj = jnp.ones(terms_ref.shape[1:], dtype=jnp.bool_)
-            for t, op, thr in zip(grp.term_ids, grp.ops, grp.thrs):
-                obj = obj & apply_op(terms_ref[t], op, thr)
-            obj = obj & (valid_ref[g] > 0)
-            if grp.kind == GROUP_COUNT:
-                gpass = obj.astype(jnp.int32).sum(axis=-1) >= grp.min_count
-            else:
-                ht = (weights_ref[g] * obj.astype(jnp.float32)).sum(axis=-1)
-                gpass = apply_op(ht, grp.cmp_op, grp.cmp_thr)
-        mask = mask & gpass
+    # --- predicate (shared body: repro.kernels.ref.predicate_mask) ---
+    mask = predicate_mask(
+        program, terms_ref[...], valid_ref[...], weights_ref[...]
+    )
 
     # --- compact (same body as stream_compact) ---
     maskf = mask.astype(jnp.float32)

@@ -217,8 +217,26 @@ class SharedScanEngine:
                     elif kind == ACCEPT_ALL:
                         mask = np.ones(m, dtype=bool)
                     elif not plan.filter_branches:
-                        # selection-free tenant: pure projection
-                        mask = np.ones(m, dtype=bool)
+                        # constant predicate: a selection-free projection
+                        # passes everything, an OR over absent-era triggers
+                        # passes nothing (DESIGN.md §10)
+                        if self.fused:
+                            from repro.core.neardata import program_eval_np
+
+                            mask = program_eval_np(
+                                data if data is not None else {},
+                                programs[i], m,
+                            )
+                        else:
+                            from repro.core.query import eval_stage
+
+                            mask = np.ones(m, dtype=bool)
+                            for _, stage in plan.query.stages():
+                                if stage:
+                                    mask &= eval_stage(
+                                        stage, data if data is not None
+                                        else {}, m,
+                                    )
                     elif self.fused:
                         pad_K[i] = max(
                             pad_K[i], window_pad_K(data, programs[i], store)

@@ -306,3 +306,87 @@ def test_shared_scan_single_query_degenerates(store):
     solo = SkimEngine(store).run(QUERY, "near_data")
     _assert_same_output(batch.results[0], solo)
     assert batch.amortization == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# late-growing pad_K regression
+# ---------------------------------------------------------------------------
+
+
+def _ragged_store_and_query(peak_window: int):
+    """3-window store whose max object multiplicity (9 -> pad_K 16) first
+    appears in window ``peak_window``; every other event has <= 2."""
+    from repro.data.store import EventStore
+
+    rng = np.random.default_rng(5)
+    chunk, n = 256, 3 * 256
+    counts = rng.integers(0, 3, n).astype(np.int32)
+    lo = peak_window * chunk
+    counts[lo + 7 : lo + 10] = 9
+    total = int(counts.sum())
+    columns = {
+        "nObj": counts,
+        "Obj_pt": rng.exponential(30.0, total).astype(np.float32),
+        "met": rng.normal(30.0, 10.0, n).astype(np.float32),
+    }
+    store = EventStore.from_arrays(
+        columns, jagged={"Obj_pt": "nObj"}, basket_events=chunk
+    )
+    query = {
+        "branches": ["met", "Obj_*"],
+        "selection": {
+            "object": [{"collection": "Obj",
+                        "cuts": [{"var": "pt", "op": ">", "value": 25.0}],
+                        "min_count": 2}],
+            "event": [{"type": "expr", "expr": "met + 0.1*sum(Obj_pt)",
+                       "op": ">", "value": 25.0}],
+        },
+    }
+    return store, query, chunk
+
+
+@pytest.mark.parametrize("peak_window", [0, 1, 2])
+def test_late_growing_pad_k_engine_bit_identical(peak_window):
+    """A window late in the file with the max multiplicity must not
+    mis-pad earlier or later windows, wherever the peak lands."""
+    store, query, _ = _ragged_store_and_query(peak_window)
+    ref = run_skim(store, query, mode="near_data", fused=False,
+                   pipeline=False, prune=False)
+    assert 0 < ref.n_passed < store.n_events
+    res = run_skim(store, query, mode="near_data", fused=True,
+                   pipeline=False, prune=False)
+    _assert_same_output(res, ref)
+
+
+@pytest.mark.parametrize("peak_window", [1, 2])
+def test_late_growing_pad_k_device_windows(peak_window):
+    """The engine's monotonic pad_K growth on the padded device backend:
+    early windows evaluate at the small K, the peak window forces the
+    jump, later windows run wider than they need — every mask must match
+    the staged evaluator, and K must grow exactly once."""
+    from repro.core.neardata import window_pad_K
+
+    store, query, chunk = _ragged_store_and_query(peak_window)
+    q = parse_query(query)
+    plan = plan_skim(q, store)
+    program = plan.compiled_program()
+    pad_K, seen_K = 0, []
+    for start in range(0, store.n_events, chunk):
+        stop = min(start + chunk, store.n_events)
+        data = {
+            "met": store.read_flat("met", start, stop),
+            "nObj": store.read_flat("nObj", start, stop),
+            "Obj_pt": store.read_jagged("Obj_pt", start, stop)[0],
+        }
+        pad_K = max(pad_K, window_pad_K(data, program, store))
+        seen_K.append(pad_K)
+        mask, _ = fused_window_skim(
+            data, program, store, K=pad_K, pad_to=chunk, backend="xla"
+        )
+        want = np.ones(stop - start, dtype=bool)
+        for _, stage in q.stages():
+            want &= eval_stage(stage, data, stop - start)
+        np.testing.assert_array_equal(mask, want, err_msg=f"window {start}")
+    # one growth step: 2 -> 16 at the peak window, stable afterwards
+    assert seen_K[peak_window:] == [16] * (3 - peak_window)
+    assert all(k == 2 for k in seen_K[:peak_window])
