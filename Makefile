@@ -12,11 +12,9 @@ test:  ## tier-1 suite
 bench:  ## full benchmark harness (CSV on stdout)
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr; the CI step)
-	PYTHONPATH=src:. $(PY) benchmarks/bench_pipeline.py --smoke
-	PYTHONPATH=src:. $(PY) benchmarks/bench_cluster.py --smoke
-	PYTHONPATH=src:. $(PY) benchmarks/bench_prune.py --smoke
-	PYTHONPATH=src:. $(PY) benchmarks/bench_expr.py --smoke
+smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade; the CI step).  Emits BENCH_<pr>.json.
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --smoke --json \
+		--only pipeline,cluster,prune,expr,cascade
 
 lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
 	ruff check src tests benchmarks examples

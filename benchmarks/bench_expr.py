@@ -88,7 +88,10 @@ def run(smoke: bool = False) -> dict:
     if smoke:
         common.N_EVENTS = min(common.N_EVENTS, 20_000)
     store = common.get_store("bitpack")
-    engine = SkimEngine(store, input_link=WAN_1G, near_input_link=LOCAL_DISK)
+    # cascade=False: this is the PR-4 derived-expression figure, priced
+    # against the preload executor (the cascade is bench_cascade.py's)
+    engine = SkimEngine(store, input_link=WAN_1G, near_input_link=LOCAL_DISK,
+                        cascade=False)
     query = _query(store.n_events)
     # warm jit/numpy/page caches so stage timings are clean
     engine.run(query, "near_data", fused=True, prune=False)

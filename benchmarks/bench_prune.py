@@ -112,8 +112,12 @@ def run(smoke: bool = False) -> dict:
     # eval) only dominates at the per-side floor, so take real minima
     repeats = REPEATS
     store = common.get_store("bitpack")
+    # cascade=False pins the preload executor the pruning ledger is
+    # priced against (DESIGN.md §9): the cascaded executor catches many
+    # of the same dead windows dynamically (its own figure of merit —
+    # bench_cascade.py), which would understate the pure zone-map win
     engine = SkimEngine(
-        store, input_link=WAN_1G, near_input_link=LOCAL_DISK
+        store, input_link=WAN_1G, near_input_link=LOCAL_DISK, cascade=False
     )
     queries = _queries(store.n_events)
     # warm jit/numpy/page caches so stage timings are clean

@@ -89,5 +89,13 @@ def get_store(codec: str = "bitpack") -> EventStore:
     return st
 
 
+# every csv_row lands here too, so harness drivers (benchmarks/run.py
+# --json) can dump a machine-readable BENCH_<pr>.json of the same rows
+BENCH_ROWS: list[dict] = []
+
+
 def csv_row(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    BENCH_ROWS.append(
+        {"name": name, "value": float(us_per_call), "derived": derived}
+    )

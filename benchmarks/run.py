@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
 
   Fig 4a -> bench_latency      Fig 4b -> bench_breakdown
   Fig 5a -> bench_nearstorage  Fig 5b -> bench_utilization
-  (ours)  -> bench_kernels, roofline (from dry-run artifacts),
+  (ours)  -> bench_kernels,
              bench_pipeline (serial vs pipelined vs fused-pipelined
              near-data executor: window prefetch overlap + the fused
              predicate/compact device pass), bench_cluster (1->8 node
@@ -13,22 +13,32 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              reference on selective / accept-all / undecidable queries),
              bench_expr (derived-expression tier: Z-window skim, fused
              vs staged and pruned vs reference),
+             bench_cascade (cascaded phase-1 execution vs the
+             fused+pruned preload path),
              bench_scaling (multi-shard)
 
 Module selection (CI and the 2-core dev host pay for one figure, not the
 suite)::
 
     python benchmarks/run.py --only prune,expr          # just these two
-    python benchmarks/run.py --skip kernels,roofline    # all but these
+    python benchmarks/run.py --skip kernels             # all but these
     python benchmarks/run.py --only expr --smoke        # shrunken store
+
+``--json [PATH]`` additionally writes every emitted row — modeled times
+and bytes moved — to a machine-readable ``BENCH_<pr>.json`` (default
+name), the perf-trajectory artifact CI uploads per PR.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import time
+
+# the PR this tree's benchmark artifact belongs to (BENCH_<pr>.json)
+PR_NUMBER = 5
 
 
 def _modules() -> list[tuple[str, str, str]]:
@@ -43,8 +53,8 @@ def _modules() -> list[tuple[str, str, str]]:
         ("cluster", "bench_cluster", "distributed skim cluster"),
         ("prune", "bench_prune", "zone-map predicate pushdown"),
         ("expr", "bench_expr", "derived-expression tier"),
+        ("cascade", "bench_cascade", "cascaded phase-1 execution"),
         ("scaling", "bench_scaling", "beyond-paper scaling/overlap"),
-        ("roofline", "roofline", "roofline (from dry-run artifacts)"),
     ]
 
 
@@ -69,6 +79,12 @@ def main(argv: list[str] | None = None) -> None:
         "--smoke", action="store_true",
         help="pass smoke mode (shrunken store) to modules that support it",
     )
+    ap.add_argument(
+        "--json", nargs="?", const=f"BENCH_{PR_NUMBER}.json", default=None,
+        metavar="PATH",
+        help="write the emitted rows as machine-readable JSON "
+        f"(default path: BENCH_{PR_NUMBER}.json)",
+    )
     args = ap.parse_args(argv)
     only = _parse_names(args.only, known)
     skip = _parse_names(args.skip, known)
@@ -76,9 +92,11 @@ def main(argv: list[str] | None = None) -> None:
         raise SystemExit(f"--only and --skip overlap: {sorted(only & skip)}")
 
     import benchmarks
+    from benchmarks import common
 
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
+    per_module: dict[str, dict] = {}
     for name, attr, label in _modules():
         if (only and name not in only) or name in skip:
             continue
@@ -90,8 +108,27 @@ def main(argv: list[str] | None = None) -> None:
             if args.smoke and "smoke" in inspect.signature(mod.run).parameters
             else {}
         )
+        row0 = len(common.BENCH_ROWS)
+        t_mod = time.perf_counter()
         mod.run(**kwargs)
-    print(f"# total {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+        per_module[name] = {
+            "label": label,
+            "wall_s": time.perf_counter() - t_mod,
+            "rows": common.BENCH_ROWS[row0:],
+        }
+    total_s = time.perf_counter() - t0
+    print(f"# total {total_s:.1f}s", file=sys.stderr)
+
+    if args.json:
+        doc = {
+            "pr": PR_NUMBER,
+            "smoke": bool(args.smoke),
+            "total_wall_s": total_s,
+            "benchmarks": per_module,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(doc, fh, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -2,23 +2,16 @@
 
 1. build a synthetic NanoAOD-like columnar store,
 2. write a JSON selection query (paper Fig. 2c),
-3. run the near-data two-phase skim,
-4. inspect the operation breakdown (paper Fig. 4b),
-5. feed the survivors into a (tiny) training run.
+3. inspect the physical plan (zone-map window decisions + the cascaded
+   phase-1 stage order, DESIGN.md §9/§11),
+4. run the near-data two-phase skim,
+5. compare against the legacy client-side baseline (paper Fig. 4b).
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
 from repro.core import SkimEngine, WAN_1G
-from repro.data.pipeline import SkimTokenPipeline
 from repro.data.synth import make_nanoaod_like
-from repro.models.model import init_params
-from repro.train.loop import TrainConfig, train_loop
-from repro.train.optim import AdamWConfig
 
 QUERY = {
     "input": "events.skim",
@@ -50,30 +43,29 @@ def main() -> None:
     print(f"   {store.n_events} events x {len(store.branch_names())} branches, "
           f"{store.compressed_bytes()/1e6:.1f} MB compressed")
 
-    print("== 2./3. near-data two-phase skim ==")
+    print("== 2./3. near-data two-phase skim (cascaded phase 1) ==")
     engine = SkimEngine(store, input_link=WAN_1G)
     res = engine.run(QUERY, mode="near_data")
     print(f"   {res.plan.describe()}")
     print(f"   passed {res.n_passed}/{res.n_input} events "
           f"({100*res.selectivity:.2f}%)")
+    print(f"   moved {res.stats.bytes_fetched/1e6:.2f} MB in "
+          f"{res.stats.requests} requests"
+          + (f"; cascade skipped {res.stats.cascade_bytes_skipped/1e6:.2f} MB "
+             "of phase-1 fetch"
+             if res.stats.cascade_bytes_skipped else ""))
 
     print("== 4. operation breakdown (Fig. 4b analogue) ==")
     for op, secs in res.breakdown.as_dict().items():
         print(f"   {op:16s} {secs:8.4f}s")
+
+    print("== 5. legacy client-side baseline ==")
     legacy = engine.run(QUERY, mode="client_plain")
+    print(f"   client_plain moved {legacy.stats.bytes_fetched/1e6:.2f} MB "
+          f"({legacy.stats.bytes_fetched/max(res.stats.bytes_fetched, 1):.1f}x "
+          "more than near-data)")
     print(f"   speedup vs legacy client-side: "
           f"{legacy.breakdown.total()/res.breakdown.total():.1f}x")
-
-    print("== 5. train a tiny LM on the skimmed physics tokens ==")
-    cfg = get_config("gemma3-1b", smoke=True)
-    pipe = SkimTokenPipeline(store, QUERY, cfg.vocab, seq_len=32, global_batch=4)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    tcfg = TrainConfig(optim=AdamWConfig(lr=3e-3, warmup_steps=2), log_every=5)
-    train_loop(
-        cfg, params,
-        lambda s: {k: jnp.asarray(v) for k, v in pipe.batch(s % 4).items()},
-        tcfg, n_steps=20,
-    )
     print("done.")
 
 

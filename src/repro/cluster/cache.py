@@ -95,6 +95,11 @@ def canonical_query(query: Query | dict | str) -> str:
         # strict changes what a store with missing trigger branches
         # produces (error vs constant-False), so it addresses content
         "strict": bool(q.strict),
+        # the query-level cascade override (DESIGN.md §11): survivors are
+        # bit-identical either way, but a cached NodeResponse carries the
+        # executor's byte/request ledger, which the cascade changes —
+        # None (engine decides) / True / False address differently
+        "cascade": q.cascade,
         "stages": {
             name: sorted(
                 (_node_doc(n) for n in stage), key=lambda d: json.dumps(d)
@@ -116,8 +121,11 @@ def query_hash(query: Query | dict | str) -> str:
 # re-encoding identical data keeps hitting (stats are deterministic
 # functions of the basket contents).  v3: the canonical query form grew
 # the ``strict`` flag and the derived-expression node docs, changing
-# query hashes for every query.
-CACHE_KEY_VERSION = 3
+# query hashes for every query.  v4: the canonical form grew the
+# ``cascade`` flag (cascaded phase-1 execution, DESIGN.md §11) — results
+# are bit-identical across the upgrade, but cached responses carry the
+# executor's accounting ledger, which the cascade changes.
+CACHE_KEY_VERSION = 4
 
 
 def versioned_key(query_hash_hex: str, manifest_hash: str) -> str:

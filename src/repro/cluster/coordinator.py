@@ -600,6 +600,7 @@ def build_cluster(
     cache: SkimResultCache | None = None,
     concurrency: str = "serial",
     prune: bool = True,
+    cascade: bool = True,
     **node_kw,
 ) -> ClusterCoordinator:
     """Partition ``store`` over ``n_nodes`` storage nodes and wire up a
@@ -608,17 +609,23 @@ def build_cluster(
     ``node_kw`` passes link tiers / executor flags to every node.
     ``prune`` controls zone-map pushdown at every level: the
     coordinator's pre-RPC shard skip AND the nodes' window-level
-    pruning (DESIGN.md §9)."""
+    pruning (DESIGN.md §9).  ``cascade`` controls the nodes' cascaded
+    phase-1 executor (DESIGN.md §11); ``False`` restores the PR-4
+    full-preload accounting reference."""
     from repro.cluster.shard import partition_store
 
     shards = partition_store(
         store, n_nodes, policy=policy, window_events=window_events
     )
-    nodes = [StorageNode(sh, prune=prune, **node_kw) for sh in shards]
+    nodes = [
+        StorageNode(sh, prune=prune, cascade=cascade, **node_kw)
+        for sh in shards
+    ]
     replicas = (
         {
             sh.shard_id: StorageNode(
-                sh, node_id=n_nodes + sh.shard_id, prune=prune, **node_kw
+                sh, node_id=n_nodes + sh.shard_id, prune=prune,
+                cascade=cascade, **node_kw
             )
             for sh in shards
         }

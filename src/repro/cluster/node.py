@@ -86,12 +86,14 @@ class StorageNode:
         fused: bool = True,
         pipeline: bool | str = True,
         prune: bool = True,
+        cascade: bool = True,
     ):
         self.shard = shard
         self.node_id = shard.shard_id if node_id is None else node_id
         self.near_input_link = near_input_link
         self.output_link = output_link
         self.prune = prune
+        self.cascade = cascade
         self.engine = SkimEngine(
             shard.store,
             input_link=output_link,
@@ -101,6 +103,7 @@ class StorageNode:
             pipeline=pipeline,
             near_input_link=near_input_link,
             prune=prune,
+            cascade=cascade,
         )
         self.shared_engine = SharedScanEngine(
             shard.store,
@@ -109,6 +112,7 @@ class StorageNode:
             chunk_events=shard.window_events,
             fused=fused,
             prune=prune,
+            cascade=cascade,
         )
         self._faults: list[_Fault] = []
         self.requests_served = 0

@@ -45,10 +45,11 @@ from repro.core.planner import SkimPlan, plan_skim
 from repro.core.query import Query, eval_stage, parse_query
 from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN
 from repro.data.store import (
-    TTREECACHE_BYTES,
+    TTREECACHE_BYTES,  # noqa: F401  (re-export; serve + tests import via engine)
     EventStore,
     FetchStats,
     WindowPrefetcher,
+    coalesced_requests,
 )
 
 
@@ -207,12 +208,10 @@ def _decode_branches(
 
 
 def _skipped_requests(nbytes: int, n_baskets: int, coalesce: bool) -> int:
-    """Requests a skipped fetch round would have issued, mirroring
-    :meth:`EventStore.fetch_window`'s model: bulk requests of at most the
-    TTreeCache size when coalescing, one seek per basket otherwise."""
-    if coalesce:
-        return max(1, -(-nbytes // TTREECACHE_BYTES)) if nbytes else 0
-    return n_baskets
+    """Requests a skipped fetch round would have issued — the store's
+    TTreeCache request model (:func:`repro.data.store.coalesced_requests`),
+    re-exported under the pricing-side name."""
+    return coalesced_requests(nbytes, n_baskets, coalesce)
 
 
 def _pipeline_schedule(
@@ -389,6 +388,7 @@ class SkimEngine:
         pipeline: bool | str = True,
         near_input_link: NetworkModel = PCIE_128G,
         prune: bool = True,
+        cascade: bool = True,
     ):
         self.store = store
         self.input_link = input_link
@@ -407,6 +407,12 @@ class SkimEngine:
         # provably empty (or provably all-surviving).  ``False`` is the
         # reference path every pruned run must stay bit-identical to.
         self.prune = prune
+        # cascaded phase-1 execution (DESIGN.md §11): run the fused
+        # near-data phase 1 as a cost-ordered cascade of per-node stages,
+        # fetching each stage's branches only for baskets still alive.
+        # ``False`` restores the PR-4 full-preload path (the accounting
+        # reference), bit-identical on survivors either way.
+        self.cascade = cascade
 
     # -- public API ----------------------------------------------------------
 
@@ -417,14 +423,23 @@ class SkimEngine:
         fused: bool | None = None,
         pipeline: bool | str | None = None,
         prune: bool | None = None,
+        cascade: bool | None = None,
     ) -> SkimResult:
         if not isinstance(query, Query):
             query = parse_query(query)
         do_prune = (self.prune if prune is None else bool(prune)) and (
             mode != "client_plain"  # full-scan legacy mode: nothing to push down
         )
+        use_fused = self.fused if fused is None else fused
+        # cascade resolution: explicit call arg > query flag > engine
+        # default; the cascade lives on the near-data fused fast path
+        # only (the other modes are the paper's fixed comparison points)
+        if cascade is None:
+            cascade = query.cascade if query.cascade is not None else self.cascade
+        do_cascade = bool(cascade) and mode == "near_data" and use_fused
         plan = plan_skim(
-            query, self.store, window_events=self.chunk_events, prune=do_prune
+            query, self.store, window_events=self.chunk_events, prune=do_prune,
+            cascade=do_cascade,
         )
         if mode == "client_plain":
             return self._run_client_plain(plan)
@@ -440,7 +455,7 @@ class SkimEngine:
                 )
             return self._run_two_phase(
                 plan, mode, self.near_input_link, coalesce=True,
-                fused=self.fused if fused is None else fused,
+                fused=use_fused,
                 prefetch=prefetch,
             )
         raise ValueError(f"unknown mode {mode}")
@@ -505,6 +520,14 @@ class SkimEngine:
             from repro.kernels import ops  # noqa: F401
 
             jax.default_backend()
+        # cascaded phase 1 (DESIGN.md §11): one executor per run owns the
+        # adaptive stage order; the prefetcher loads only the pinned head
+        # stage, later stages fetch alive baskets on demand
+        cascade_exec = None
+        if fused and plan.cascade is not None:
+            from repro.core.plan import CascadeExecutor, mark_fetched
+
+            cascade_exec = CascadeExecutor(plan, store, coalesce=coalesce)
         use_threads = prefetch == "threads"
         preload = fused or bool(prefetch)
         # zone-map decisions (DESIGN.md §9): one per chunk window, or None
@@ -531,9 +554,15 @@ class SkimEngine:
             )
             if kind == PRUNE:
                 return None, Breakdown(), FetchStats()
-            names = (
-                plan.filter_branches if kind == SCAN else plan.output_branches
-            )
+            if kind != SCAN:
+                names = plan.output_branches
+            elif cascade_exec is not None:
+                # cascaded phase 1: prefetch ONLY the pinned head stage;
+                # the remaining stages fetch alive baskets on demand in
+                # the process step (DESIGN.md §11)
+                names = cascade_exec.head_branches
+            else:
+                names = plan.filter_branches
             lb, ls = Breakdown(), FetchStats()
             data = _decode_branches(store, names, start, stop, lb, ls, coalesce)
             return data, lb, ls
@@ -576,6 +605,11 @@ class SkimEngine:
             # window-local processing breakdown/stats (merged into the
             # run totals below; also feeds the pipeline schedule model)
             wb, w2s = Breakdown(), FetchStats()
+            # cascade per-window state: the basket dedup ledger and the
+            # window outcome (None on the non-cascaded paths)
+            ledger: dict[str, set] = {}
+            outcome = None
+            w1s = FetchStats()
             if kind == PRUNE:
                 # provably no survivor: phase 1 AND phase 2 never happen;
                 # account what the skipped fetch round would have moved
@@ -596,6 +630,19 @@ class SkimEngine:
                 )
                 loaded = preloaded if preloaded is not None else {}
                 mask = np.ones(m, dtype=bool)
+            elif cascade_exec is not None:
+                # ---- phase 1 (cascaded path, DESIGN.md §11): stages run
+                # cheapest-and-most-selective-first; stage k fetches its
+                # branches only for baskets still alive after stage k-1 ----
+                loaded = {}
+                mark_fetched(
+                    store, cascade_exec.head_branches, start, stop, ledger
+                )
+                outcome = cascade_exec.run_window(
+                    start, stop, preloaded, wb, w1s, ledger=ledger
+                )
+                mask = outcome.mask
+                stats.merge(w1s)
             elif fused:
                 # ---- phase 1 (fused path): one pass evaluates the
                 # compiled predicate AND compacts [index]+payload rows ----
@@ -652,22 +699,50 @@ class SkimEngine:
             window_rows.append((start, stop, k))
             if k:
                 n_passed += k
-                # ---- phase 2: output-only branches, survivors only ----
-                cols, jagged = _window_phase2(
-                    store, plan, start, stop, mask, dev_cols, loaded, wb, w2s,
-                    coalesce,
-                )
+                if outcome is not None:
+                    # ---- phase 2 (cascaded window): the basket ledger
+                    # dedups against phase 1, so filter∩output branches a
+                    # stage already moved are not paid again ----
+                    known = {**(preloaded or {}), **outcome.full_loaded}
+                    full = cascade_exec.fetch_full(
+                        plan.output_branches, start, stop, wb, w2s, ledger,
+                        known=known,
+                    )
+                    with _Timer(wb, "deserialize"):
+                        cols, jagged = _select_columns(
+                            {k2: full[k2] for k2 in plan.output_branches},
+                            mask, store,
+                        )
+                else:
+                    # ---- phase 2: output-only branches, survivors only ----
+                    cols, jagged = _window_phase2(
+                        store, plan, start, stop, mask, dev_cols, loaded, wb,
+                        w2s, coalesce,
+                    )
                 jagged_map.update(jagged)
                 for k2, v in cols.items():
                     out_cols[k2].append(v)
+            if outcome is not None:
+                # savings vs the preloading reference, ledgered AFTER both
+                # phases: a filter-branch basket counts as skipped only if
+                # neither a cascade stage nor phase 2 ever moved it (phase
+                # 2 re-fetches dead baskets of filter∩output branches for
+                # surviving windows, which must not be credited)
+                from repro.core.plan import unfetched_bytes
+
+                stats.cascade_bytes_skipped += unfetched_bytes(
+                    store, plan.filter_branches, start, stop, ledger
+                )
             b.merge(wb)
             phase2_stats.merge(w2s)
             if win_records:
                 win_records[-1].update(
                     {
                         "proc_compute": wb.decompress + wb.deserialize + wb.filter,
-                        "p2_bytes": w2s.bytes_fetched,
-                        "p2_requests": w2s.requests,
+                        # cascaded stage fetches are non-overlapped fetch in
+                        # the schedule, same currency as phase 2
+                        "p2_bytes": w2s.bytes_fetched + w1s.bytes_fetched,
+                        "p2_requests": w2s.requests + w1s.requests,
                     }
                 )
         phase_wall = time.perf_counter() - t_phase
@@ -714,7 +789,13 @@ class SkimEngine:
                 if d.decision != SCAN
             ],
             "prune": decisions is not None,
+            # cascaded phase-1 ledger (DESIGN.md §11)
+            "cascade": cascade_exec is not None,
         }
+        if cascade_exec is not None:
+            extras["cascade_order"] = cascade_exec.order()
+            extras["cascade_stages"] = cascade_exec.state.report()
+            extras["cascade_bytes_skipped"] = stats.cascade_bytes_skipped
         if win_records:
             # exact double-buffered schedule from the per-window records
             # (what the threaded prefetcher realizes on capable hosts)
@@ -739,7 +820,9 @@ def run_skim(
     fused: bool | None = None,
     pipeline: bool | str | None = None,
     prune: bool | None = None,
+    cascade: bool | None = None,
 ) -> SkimResult:
     return SkimEngine(store, input_link, output_link).run(
-        query, mode, fused=fused, pipeline=pipeline, prune=prune
+        query, mode, fused=fused, pipeline=pipeline, prune=prune,
+        cascade=cascade,
     )

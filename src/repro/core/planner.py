@@ -36,6 +36,11 @@ class SkimPlan:
     # chunking (DESIGN.md §9).  ``None`` when planning ran without
     # pruning; the engine then scans every window (the reference path).
     window_decisions: list[WindowDecision] | None = None
+    # cascaded phase-1 physical plan (DESIGN.md §11): the cost-ordered
+    # stage IR the cascade executor runs.  ``None`` when planning ran
+    # without cascading (or there is nothing to cascade); the engines
+    # then preload the full filter set per window (the PR-4 path).
+    cascade: object = None  # repro.core.plan.CascadePlan | None
     _program: object = None
 
     def compiled_program(self):
@@ -52,16 +57,30 @@ class SkimPlan:
         return self._program
 
     def describe(self) -> str:
-        pruned = accept = 0
+        """One-line physical-plan summary: branch sets, the zone-map
+        window decisions (prune / accept-all / scan counts), and the
+        cascade stage order — the three pushdown levers, together."""
+        pruned = accept = scan = 0
         for d in self.window_decisions or ():
             pruned += d.decision == "prune"
             accept += d.decision == "accept_all"
+            scan += d.decision == "scan"
+        windows = (
+            f"windows[prune={pruned}, accept_all={accept}, scan={scan}]"
+            if self.window_decisions is not None
+            else "windows=unpruned"
+        )
+        cascade = (
+            f"cascade[{self.cascade.n_stages} stages: {self.cascade.describe()}]"
+            if self.cascade is not None
+            else "cascade=off"
+        )
         return (
             f"SkimPlan(filter={len(self.filter_branches)} branches, "
             f"output={len(self.output_branches)}, "
             f"phase2={len(self.output_only_branches)}, "
             f"excluded={len(self.excluded_by_optimization)}, "
-            f"pruned={pruned}, accept_all={accept})"
+            f"{windows}, {cascade})"
         )
 
 
@@ -107,6 +126,7 @@ def plan_skim(
     store,
     window_events: int | None = None,
     prune: bool = False,
+    cascade: bool = False,
 ) -> SkimPlan:
     available = store.branch_names()
 
@@ -151,6 +171,12 @@ def plan_skim(
         if all(d.decision == SCAN for d in decisions):
             decisions = None  # nothing provable: identical to no pruning
 
+    cascade_plan = None
+    if cascade and filter_branches:
+        from repro.core.plan import build_cascade
+
+        cascade_plan = build_cascade(query, store)
+
     return SkimPlan(
         query=query,
         filter_branches=filter_branches,
@@ -159,4 +185,5 @@ def plan_skim(
         excluded_by_optimization=excluded,
         payload_branches=payload,
         window_decisions=decisions,
+        cascade=cascade_plan,
     )

@@ -213,6 +213,11 @@ class Query:
     # strict=True restores the hard KeyError for trigger-OR branches the
     # store does not carry (the pre-era-robustness behavior)
     strict: bool = False
+    # cascaded phase-1 execution (DESIGN.md §11): ``True``/``False``
+    # forces the cascade on or off for this query, ``None`` defers to the
+    # executing engine's default.  Part of the canonical query form (the
+    # executor flag changes a cached result's accounting payload).
+    cascade: bool | None = None
     meta: dict = field(default_factory=dict)
 
     def stages(self) -> list[tuple[str, tuple]]:
@@ -325,9 +330,10 @@ def parse_query(doc: dict | str, strict: bool = False) -> Query:
         object_stage=objs,
         event_stage=tuple(events),
         strict=bool(doc.get("strict", strict)),
+        cascade=(None if doc.get("cascade") is None else bool(doc["cascade"])),
         meta={k: v for k, v in doc.items() if k not in
               ("input", "output", "branches", "force_all", "selection",
-               "strict")},
+               "strict", "cascade")},
     )
 
 

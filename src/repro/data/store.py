@@ -110,6 +110,13 @@ class FetchStats:
     # the savings ledger, not traffic.
     bytes_skipped: int = 0
     requests_skipped: int = 0
+    # bytes the cascaded executor never moved relative to the preloading
+    # reference (DESIGN.md §11): filter-branch baskets that neither a
+    # cascade stage nor phase 2 ever fetched, so
+    # bytes_fetched + cascade_bytes_skipped == the preload run's
+    # bytes_fetched, exactly.  A savings ledger like ``bytes_skipped``,
+    # not traffic.
+    cascade_bytes_skipped: int = 0
 
     def record(self, branch: str, nbytes: int, n_requests: int = 1) -> None:
         self.bytes_fetched += nbytes
@@ -126,6 +133,7 @@ class FetchStats:
         self.requests += other.requests
         self.bytes_skipped += other.bytes_skipped
         self.requests_skipped += other.requests_skipped
+        self.cascade_bytes_skipped += other.cascade_bytes_skipped
         for k, v in other.by_branch.items():
             self.by_branch[k] = self.by_branch.get(k, 0) + v
 
@@ -137,6 +145,19 @@ class FetchStats:
         for p in parts:
             out.merge(p)
         return out
+
+
+def coalesced_requests(
+    nbytes: int, n_baskets: int, coalesce: bool,
+    cache_bytes: int = TTREECACHE_BYTES,
+) -> int:
+    """Requests one fetch round issues under the TTreeCache model: bulk
+    requests of at most ``cache_bytes`` when coalescing, one seek per
+    basket otherwise.  The single source of truth — `fetch_window`, the
+    engine's skip pricing, and the cascade's ledger all use it."""
+    if coalesce:
+        return max(1, -(-nbytes // cache_bytes)) if nbytes else 0
+    return n_baskets
 
 
 class WindowPrefetcher:
@@ -518,13 +539,10 @@ class EventStore:
             )
         if stats is not None:
             if coalesce:
-                n_req = (
-                    max(1, -(-local.bytes_fetched // cache_bytes))
-                    if local.bytes_fetched
-                    else 0
-                )
                 stats.bytes_fetched += local.bytes_fetched
-                stats.requests += n_req
+                stats.requests += coalesced_requests(
+                    local.bytes_fetched, 0, True, cache_bytes
+                )
                 for k, v in local.by_branch.items():
                     stats.by_branch[k] = stats.by_branch.get(k, 0) + v
             else:

@@ -1,3 +1,3 @@
-from repro.serve.engine import ServeEngine, make_serve_step
+from repro.serve.engine import SharedScanEngine, SharedScanResult
 
-__all__ = ["ServeEngine", "make_serve_step"]
+__all__ = ["SharedScanEngine", "SharedScanResult"]

@@ -1,30 +1,27 @@
-"""Serving layer: shared-scan skim batching + LM decode serving.
+"""Serving layer: shared-scan skim batching (DESIGN.md §4c).
 
-Two multi-tenant engines live here:
+:class:`SharedScanEngine` is the skim service path: N concurrent tenant
+queries execute over ONE pass of the same dataset.  With the cascaded
+executor (DESIGN.md §11) the shared pass is demand-driven: the
+double-buffered load stage fetches only the union of the tenants' pinned
+*head* stages, each tenant's remaining cascade stages fetch alive
+baskets on demand through a window-shared basket ledger, and phase 2
+flows through the same ledger — so every ``(branch, basket)`` pair moves
+at most once per window across the whole batch.  I/O and decode amortize
+across tenants — the paper's interactive-rate multi-user skimming
+regime — while each tenant still gets a private phase-2 output and its
+own :class:`~repro.core.engine.SkimResult`, bit-identical to running the
+query alone.  ``cascade=False`` restores the PR-4 union-preload pass.
 
-  * :class:`SharedScanEngine` — the skim service path (DESIGN.md §4c).
-    N concurrent tenant queries execute over ONE pass of the same
-    dataset: the union of their filter branches is fetched + decoded once
-    per basket window (double-buffered behind filtering), then each
-    query's compiled predicate program runs against the shared decoded
-    window.  I/O and decode amortize across tenants — the paper's
-    interactive-rate multi-user skimming regime — while each tenant still
-    gets a private phase-2 (survivor-only output fetch) and its own
-    :class:`~repro.core.engine.SkimResult`, bit-identical to running the
-    query alone.
-  * :class:`ServeEngine` — batched single-token LM decode against
-    preallocated caches (continuous batching over a fixed slot pool);
-    ``make_serve_step`` is what the dry-run lowers for the ``decode_*`` /
-    ``long_*`` shapes.
+(The LM decode-serving engine that shared this module in the seed lives
+in ``attic/`` now — the skim tree is the repo's single story.)
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (
@@ -34,6 +31,7 @@ from repro.core.engine import (
     SkimResult,
     _concat_output,
     _decode_branches,
+    _select_columns,
     _skipped_requests,
     _Timer,
     _window_phase2,
@@ -43,8 +41,6 @@ from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
 from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN
 from repro.data.store import EventStore, FetchStats, WindowPrefetcher
-from repro.models.model import decode_step, init_cache, prefill
-
 
 # ---------------------------------------------------------------------------
 # shared-scan skim service
@@ -79,14 +75,15 @@ class SharedScanResult:
 class SharedScanEngine:
     """Multi-tenant skim executor: N queries, one pass over the dataset.
 
-    Phase 1 fetches + decodes the *union* of all tenants' filter branches
-    once per basket window (prefetched double-buffered, like the
-    single-query pipelined executor) and evaluates every tenant's
-    compiled predicate program against the shared decoded window.  Phase
-    2 stays per-tenant: only baskets holding that tenant's survivors
-    move, into that tenant's private output.  Per-query outputs are
-    bit-identical to running each query alone through
-    ``SkimEngine.run(..., mode="near_data")``.
+    Phase 1 runs once per basket window for the whole batch: the load
+    stage fetches + decodes the union of the tenants' phase-1 head sets
+    (prefetched double-buffered, like the single-query pipelined
+    executor), then every tenant's cascade evaluates against the shared
+    decoded window, pulling later-stage branches on demand through a
+    window-shared basket ledger.  Phase 2 stays per-tenant: only baskets
+    holding that tenant's survivors move, into that tenant's private
+    output.  Per-query outputs are bit-identical to running each query
+    alone through ``SkimEngine.run(..., mode="near_data")``.
     """
 
     def __init__(
@@ -98,6 +95,7 @@ class SharedScanEngine:
         fused: bool = True,
         pipeline: bool | str = False,
         prune: bool = True,
+        cascade: bool = True,
     ):
         self.store = store
         self.input_link = input_link
@@ -108,6 +106,9 @@ class SharedScanEngine:
         # the shared union fetch skips a window only when EVERY tenant
         # prunes it.  ``False`` is the reference path.
         self.prune = prune
+        # cascaded phase 1 (DESIGN.md §11); ``False`` restores the PR-4
+        # union-preload pass.  Applies to the fused path only.
+        self.cascade = cascade
         # False = serial window loop; "threads" = real WindowPrefetcher
         # worker.  (The modeled pipeline schedule is a single-query
         # SkimEngine feature; the shared scan's win is byte amortization.)
@@ -119,19 +120,33 @@ class SharedScanEngine:
 
     def run_batch(self, queries: list[Query | dict | str]) -> SharedScanResult:
         from repro.core.neardata import fused_window_skim, window_pad_K
+        from repro.core.plan import CascadeExecutor, mark_fetched, unfetched_bytes
 
         store, chunk = self.store, self.chunk_events
         n = store.n_events
         t0 = time.perf_counter()
 
         parsed = [q if isinstance(q, Query) else parse_query(q) for q in queries]
+
+        def _wants_cascade(q: Query) -> bool:
+            flag = q.cascade if q.cascade is not None else self.cascade
+            return bool(flag) and self.fused
+
         plans = [
-            plan_skim(q, store, window_events=chunk, prune=self.prune)
+            plan_skim(
+                q, store, window_events=chunk, prune=self.prune,
+                cascade=_wants_cascade(q),
+            )
             for q in parsed
         ]
         programs = [p.compiled_program() if self.fused else None for p in plans]
+        executors = [
+            CascadeExecutor(p, store) if p.cascade is not None else None
+            for p in plans
+        ]
 
-        # union of filter branches, first-seen order (deterministic)
+        # full union of filter branches, first-seen order: the pricing /
+        # amortization reference (what the PR-4 union preload moved)
         union: list[str] = []
         seen: set[str] = set()
         for plan in plans:
@@ -139,6 +154,15 @@ class SharedScanEngine:
                 if br not in seen:
                     seen.add(br)
                     union.append(br)
+        # what the load stage actually fetches per window: each tenant's
+        # pinned head stage when cascading, its full filter set otherwise
+        load_union: list[str] = []
+        seen_load: set[str] = set()
+        for plan, ex in zip(plans, executors):
+            for br in (ex.head_branches if ex is not None else plan.filter_branches):
+                if br not in seen_load:
+                    seen_load.add(br)
+                    load_union.append(br)
 
         shared_b, shared_stats = Breakdown(), FetchStats()
 
@@ -164,12 +188,15 @@ class SharedScanEngine:
             if start // chunk not in load_windows:
                 # every tenant proved this window empty: the shared union
                 # fetch never happens and no tenant runs phase 2 either
+                # (skip priced against the full-union preload reference)
                 ls = FetchStats()
                 nbytes, nb = store.range_comp_bytes(union, start, stop)
                 ls.skip(nbytes, _skipped_requests(nbytes, nb, coalesce=True))
                 return None, Breakdown(), ls
             lb, ls = Breakdown(), FetchStats()
-            data = _decode_branches(store, union, start, stop, lb, ls, coalesce=True)
+            data = _decode_branches(
+                store, load_union, start, stop, lb, ls, coalesce=True
+            )
             return data, lb, ls
 
         # per-query accumulation state
@@ -190,83 +217,135 @@ class SharedScanEngine:
             shared_b.merge(lb)
             shared_stats.merge(ls)
             m = stop - start
+            # window-shared basket ledger (DESIGN.md §11): every
+            # (branch, basket) pair moves at most once per window across
+            # all tenants and both phases
+            ledger: dict[str, set] = {}
+            if data is not None:
+                mark_fetched(store, load_union, start, stop, ledger)
             for i, plan in enumerate(plans):
                 b = per_b[i]
+                ex = executors[i]
                 dev_cols: dict[str, np.ndarray] = {}
+                full_loaded: dict = {}
                 kind = _tenant_kind(i, wi)
                 if kind == PRUNE:
                     # provably no survivor for this tenant: no filter
                     # eval, no phase 2
                     window_rows[i].append((start, stop, 0))
                     continue
-                with _Timer(b, "filter"):
-                    if (
-                        kind == ACCEPT_ALL
-                        and self.fused
-                        and data is not None
-                        and plan.filter_branches  # selection-free: no data
-                    ):
-                        # provably all survive: the fused executor's
-                        # decision short-circuit skips predicate eval and
-                        # passes the payload columns through whole
-                        mask, dev_cols = fused_window_skim(
-                            data, programs[i], store,
-                            payload_branches=plan.payload_branches,
-                            decision=ACCEPT_ALL,
-                        )
-                    elif kind == ACCEPT_ALL:
-                        mask = np.ones(m, dtype=bool)
-                    elif not plan.filter_branches:
-                        # constant predicate: a selection-free projection
-                        # passes everything, an OR over absent-era triggers
-                        # passes nothing (DESIGN.md §10)
-                        if self.fused:
-                            from repro.core.neardata import program_eval_np
+                if kind == SCAN and ex is not None and data is not None:
+                    # cascaded phase 1: head evaluates from the shared
+                    # decoded window, later stages fetch alive baskets on
+                    # demand — bytes charged to the SHARED pass (they are
+                    # reusable by every tenant through the ledger), eval
+                    # and decode time to this tenant
+                    outcome = ex.run_window(
+                        start, stop, data, b, shared_stats, ledger=ledger
+                    )
+                    mask = outcome.mask
+                    full_loaded = outcome.full_loaded
+                elif kind == ACCEPT_ALL and ex is not None and data is not None:
+                    # provably all survive: no predicate eval; the cascade
+                    # tenant's phase 2 below flows through the ledger (the
+                    # fused payload shortcut needs the full filter preload
+                    # the cascade deliberately no longer does)
+                    mask = np.ones(m, dtype=bool)
+                else:
+                    with _Timer(b, "filter"):
+                        if (
+                            kind == ACCEPT_ALL
+                            and self.fused
+                            and data is not None
+                            and plan.filter_branches  # selection-free: no data
+                        ):
+                            # provably all survive: the fused executor's
+                            # decision short-circuit skips predicate eval and
+                            # passes the payload columns through whole
+                            mask, dev_cols = fused_window_skim(
+                                data, programs[i], store,
+                                payload_branches=plan.payload_branches,
+                                decision=ACCEPT_ALL,
+                            )
+                        elif kind == ACCEPT_ALL:
+                            mask = np.ones(m, dtype=bool)
+                        elif not plan.filter_branches:
+                            # constant predicate: a selection-free projection
+                            # passes everything, an OR over absent-era triggers
+                            # passes nothing (DESIGN.md §10)
+                            if self.fused:
+                                from repro.core.neardata import program_eval_np
 
-                            mask = program_eval_np(
-                                data if data is not None else {},
-                                programs[i], m,
+                                mask = program_eval_np(
+                                    data if data is not None else {},
+                                    programs[i], m,
+                                )
+                            else:
+                                from repro.core.query import eval_stage
+
+                                mask = np.ones(m, dtype=bool)
+                                for _, stage in plan.query.stages():
+                                    if stage:
+                                        mask &= eval_stage(
+                                            stage, data if data is not None
+                                            else {}, m,
+                                        )
+                        elif self.fused:
+                            pad_K[i] = max(
+                                pad_K[i], window_pad_K(data, programs[i], store)
+                            )
+                            mask, dev_cols = fused_window_skim(
+                                data, programs[i], store,
+                                payload_branches=plan.payload_branches,
+                                K=pad_K[i],
+                                pad_to=chunk,
                             )
                         else:
                             from repro.core.query import eval_stage
 
                             mask = np.ones(m, dtype=bool)
                             for _, stage in plan.query.stages():
-                                if stage:
-                                    mask &= eval_stage(
-                                        stage, data if data is not None
-                                        else {}, m,
-                                    )
-                    elif self.fused:
-                        pad_K[i] = max(
-                            pad_K[i], window_pad_K(data, programs[i], store)
-                        )
-                        mask, dev_cols = fused_window_skim(
-                            data, programs[i], store,
-                            payload_branches=plan.payload_branches,
-                            K=pad_K[i],
-                            pad_to=chunk,
-                        )
-                    else:
-                        from repro.core.query import eval_stage
-
-                        mask = np.ones(m, dtype=bool)
-                        for _, stage in plan.query.stages():
-                            if stage and mask.any():
-                                mask &= eval_stage(stage, data, m)
+                                if stage and mask.any():
+                                    mask &= eval_stage(stage, data, m)
                 k = int(mask.sum())
                 window_rows[i].append((start, stop, k))
                 if k == 0:
                     continue
                 n_passed[i] += k
-                cols, jagged = _window_phase2(
-                    store, plan, start, stop, mask, dev_cols,
-                    data if data is not None else {}, b,
-                    per_stats[i], coalesce=True,
-                )
+                if ex is not None and data is not None:
+                    # phase 2 through the shared ledger: baskets any stage
+                    # (or an earlier tenant) already moved are not re-paid
+                    known = {**data, **full_loaded}
+                    full = ex.fetch_full(
+                        plan.output_branches, start, stop, b, per_stats[i],
+                        ledger, known=known,
+                    )
+                    with _Timer(b, "deserialize"):
+                        cols, jagged = _select_columns(
+                            {k2: full[k2] for k2 in plan.output_branches},
+                            mask, store,
+                        )
+                else:
+                    cols, jagged = _window_phase2(
+                        store, plan, start, stop, mask, dev_cols,
+                        data if data is not None else {}, b,
+                        per_stats[i], coalesce=True,
+                    )
                 jagged_maps[i].update(jagged)
                 for k2, v in cols.items():
                     out_cols[i][k2].append(v)
+            if data is not None and executors and all(
+                ex is not None for ex in executors
+            ):
+                # cascaded-batch savings vs the union-preload reference,
+                # ledgered AFTER every tenant's phase 2 (which flows
+                # through the same ledger): a union basket counts as
+                # skipped only if nothing in the batch ever moved it.
+                # Mixed batches skip the ledger — non-cascade tenants'
+                # phase 2 bypasses it, so 0 is the honest floor.
+                shared_stats.cascade_bytes_skipped += unfetched_bytes(
+                    store, union, start, stop, ledger
+                )
 
         # phase-1 link time is paid once for the whole batch
         shared_b.fetch = self.input_link.transfer_time(
@@ -283,22 +362,27 @@ class SharedScanEngine:
             )
             out_bytes = out.compressed_bytes()
             b.output_transfer = self.output_link.transfer_time(out_bytes, 1)
+            extras = {
+                "output_bytes": out_bytes,
+                "fused": self.fused,
+                "pipelined": self.pipeline == "threads",
+                "shared_scan": True,
+                "window_rows": window_rows[i],
+                "pruned_windows": [
+                    (d.start, d.stop, d.decision)
+                    for d in decisions[i] or ()
+                    if d.decision != SCAN
+                ],
+                "prune": decisions[i] is not None,
+                "cascade": executors[i] is not None,
+            }
+            if executors[i] is not None:
+                extras["cascade_order"] = executors[i].order()
+                extras["cascade_stages"] = executors[i].state.report()
             results.append(
                 SkimResult(
                     "shared_scan", out, n, n_passed[i], b, per_stats[i], plan,
-                    extras={
-                        "output_bytes": out_bytes,
-                        "fused": self.fused,
-                        "pipelined": self.pipeline == "threads",
-                        "shared_scan": True,
-                        "window_rows": window_rows[i],
-                        "pruned_windows": [
-                            (d.start, d.stop, d.decision)
-                            for d in decisions[i] or ()
-                            if d.decision != SCAN
-                        ],
-                        "prune": decisions[i] is not None,
-                    },
+                    extras=extras,
                 )
             )
 
@@ -312,84 +396,3 @@ class SharedScanEngine:
             naive_phase1_bytes=naive,
             wall_s=time.perf_counter() - t0,
         )
-
-
-# ---------------------------------------------------------------------------
-# LM decode serving
-# ---------------------------------------------------------------------------
-
-
-def make_serve_step(cfg):
-    """serve_step(params, cache, tokens (B,1), pos (B,)) -> (logits, cache)."""
-
-    def serve_step(params, cache, tokens, pos):
-        return decode_step(params, cfg, cache, tokens, pos)
-
-    return serve_step
-
-
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new: int
-    out: list = field(default_factory=list)
-    done: bool = False
-
-
-class ServeEngine:
-    """Slot-based continuous batching: up to ``n_slots`` concurrent
-    sequences share one cache; finished slots are refilled from the queue."""
-
-    def __init__(self, cfg, params, n_slots: int = 4, s_max: int = 256):
-        self.cfg, self.params = cfg, params
-        self.n_slots, self.s_max = n_slots, s_max
-        self.cache = init_cache(cfg, n_slots, s_max)
-        self.pos = np.zeros(n_slots, np.int32)
-        self.cur = np.zeros(n_slots, np.int32)
-        self.slot_req: list[Request | None] = [None] * n_slots
-        self._step = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos),
-        )
-
-    def _admit(self, req: Request, slot: int) -> None:
-        # prefill the slot: simple per-token decode warmup (small prompts)
-        B = self.n_slots
-        toks = jnp.asarray(req.prompt)[None]
-        for t in range(len(req.prompt)):
-            tok_b = jnp.zeros((B, 1), jnp.int32).at[slot, 0].set(int(req.prompt[t]))
-            pos_b = jnp.asarray(self.pos)
-            logits, self.cache = self._step(self.params, self.cache, tok_b, pos_b)
-            self.pos[slot] += 1
-        self.cur[slot] = int(jnp.argmax(logits[slot, 0]))
-        self.slot_req[slot] = req
-
-    def run(self, requests: list[Request], max_steps: int = 10_000) -> list[Request]:
-        queue = list(requests)
-        done: list[Request] = []
-        steps = 0
-        while (queue or any(self.slot_req)) and steps < max_steps:
-            # fill free slots
-            for s in range(self.n_slots):
-                if self.slot_req[s] is None and queue:
-                    self.pos[s] = 0
-                    self._admit(queue.pop(0), s)
-            # one batched decode step for all active slots
-            toks = jnp.asarray(self.cur, jnp.int32)[:, None]
-            logits, self.cache = self._step(
-                self.params, self.cache, toks, jnp.asarray(self.pos)
-            )
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
-            for s in range(self.n_slots):
-                req = self.slot_req[s]
-                if req is None:
-                    continue
-                req.out.append(int(self.cur[s]))
-                self.pos[s] += 1
-                self.cur[s] = nxt[s]
-                if len(req.out) >= req.max_new or self.pos[s] >= self.s_max - 1:
-                    req.done = True
-                    done.append(req)
-                    self.slot_req[s] = None
-            steps += 1
-        return done

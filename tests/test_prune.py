@@ -133,14 +133,16 @@ def test_accept_all_bit_identical_and_single_round(store):
 
 def test_prune_savings_ledger_exact_for_preload_reference(store):
     """Against the preloading (fused) reference, fetched + skipped bytes
-    must account for every byte the reference moved."""
+    must account for every byte the reference moved.  ``cascade=False``
+    pins the preload executor the ledger is priced against (the cascaded
+    executor has its own exact ledger — tests/test_cascade.py)."""
     ref = run_skim(
         store, SELECTIVE, mode="near_data", fused=True, pipeline=False,
-        prune=False,
+        prune=False, cascade=False,
     )
     res = run_skim(
         store, SELECTIVE, mode="near_data", fused=True, pipeline=False,
-        prune=True,
+        prune=True, cascade=False,
     )
     assert res.stats.bytes_fetched + res.stats.bytes_skipped == (
         ref.stats.bytes_fetched
