@@ -12,9 +12,9 @@ test:  ## tier-1 suite
 bench:  ## full benchmark harness (CSV on stdout)
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade; the CI step).  Emits BENCH_<pr>.json.
+smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + service; the CI step).  Emits BENCH_<pr>.json.
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --smoke --json \
-		--only pipeline,cluster,prune,expr,cascade
+		--only pipeline,cluster,prune,expr,cascade,service
 
 lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
 	ruff check src tests benchmarks examples

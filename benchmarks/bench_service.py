@@ -1,0 +1,130 @@
+"""Async skim service: queue throughput + time-to-first-partial (DESIGN.md §12).
+
+What the service layer buys over the blocking library call (*Toward
+real-time data query systems in HEP*: users want first partials in
+seconds, not a batch barrier):
+
+  * **time-to-first-partial** — wall clock from submit to the first
+    streamed window-granular partial, vs the blocking ``run_skim`` call
+    that returns nothing until every window is done.  The stream pays
+    one window; the block pays all of them.
+  * **admission pricing cost** — ``price_query`` is the per-submission
+    overhead every job pays before running (metadata only); it must stay
+    microscopic next to a single window's execution.
+  * **queue throughput** — submissions drained per second through the
+    deterministic scheduler, solo vs coalesced (batching mode shares
+    one phase-1 pass across all queued tenants, same contract as
+    bench_cluster's shared scan).
+
+``--smoke`` shrinks the store for CI.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from benchmarks.common import csv_row
+from repro.serve import SkimService, price_query
+
+REPEATS = 3
+N_JOBS = 6
+
+
+def _best(fn, repeats: int = REPEATS) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        ret = fn()
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, out = dt, ret
+    return best, out
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        common.N_EVENTS = min(common.N_EVENTS, 20_000)
+    store = common.get_store("bitpack")
+    query = common.QUERY
+
+    # warm jit/page caches so the stream-vs-block gap is executor shape,
+    # not first-call compilation
+    warm = SkimService(store)
+    warm.result(warm.submit(query).job_id)
+
+    # -- time-to-first-partial vs blocking call ----------------------------
+    def first_partial():
+        svc = SkimService(store)
+        job = svc.submit(query)
+        return next(svc.stream(job.job_id))
+
+    def blocking():
+        svc = SkimService(store)
+        return svc.result(svc.submit(query).job_id)
+
+    t_first, part = _best(first_partial)
+    t_block, job = _best(blocking)
+    n_windows = len(job.partials)
+    csv_row(
+        "service_first_partial_us",
+        t_first * 1e6,
+        f"window0 of {n_windows}: {part.n_passed} survivors",
+    )
+    csv_row(
+        "service_blocking_total_us",
+        t_block * 1e6,
+        f"first partial {t_block / max(t_first, 1e-12):.1f}x earlier "
+        "than the blocking return",
+    )
+
+    # -- admission pricing overhead ----------------------------------------
+    t_price, est = _best(lambda: price_query(query, store), repeats=20)
+    csv_row(
+        "service_admission_price_us",
+        t_price * 1e6,
+        f"priced {est.est_bytes / 1e6:.2f} MB over {est.n_windows} "
+        "windows, zero fetched",
+    )
+
+    # -- queue throughput: solo vs coalesced -------------------------------
+    def drain(batching: bool):
+        svc = SkimService(store, batching=batching)
+        for i in range(N_JOBS):
+            svc.submit(query, tenant=f"t{i}")
+        quanta = svc.run_until_idle()
+        return svc, quanta
+
+    t_solo, (svc_solo, q_solo) = _best(lambda: drain(False), repeats=1)
+    t_batch, (svc_batch, q_batch) = _best(lambda: drain(True), repeats=1)
+    fetched_solo = sum(j.stats.bytes_fetched for j in svc_solo.jobs.values())
+    fetched_batch = sum(
+        j.stats.bytes_fetched for j in svc_batch.jobs.values()
+    )
+    csv_row(
+        "service_drain_solo_us",
+        t_solo * 1e6,
+        f"{N_JOBS} jobs, {q_solo} quanta, "
+        f"{N_JOBS / max(t_solo, 1e-12):.0f} jobs/s",
+    )
+    csv_row(
+        "service_drain_batched_us",
+        t_batch * 1e6,
+        f"{N_JOBS} jobs coalesced, {q_batch} quanta, "
+        f"{fetched_solo / max(fetched_batch, 1):.2f}x fewer bytes",
+    )
+
+    return {
+        "first_partial_s": t_first,
+        "blocking_s": t_block,
+        "price_s": t_price,
+        "drain_solo_s": t_solo,
+        "drain_batched_s": t_batch,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("name,us_per_call,derived")
+    run(smoke="--smoke" in sys.argv)

@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              vs staged and pruned vs reference),
              bench_cascade (cascaded phase-1 execution vs the
              fused+pruned preload path),
+             bench_service (async job service: time-to-first-partial
+             vs blocking, admission pricing, queue throughput),
              bench_scaling (multi-shard)
 
 Module selection (CI and the 2-core dev host pay for one figure, not the
@@ -38,7 +40,7 @@ import sys
 import time
 
 # the PR this tree's benchmark artifact belongs to (BENCH_<pr>.json)
-PR_NUMBER = 5
+PR_NUMBER = 6
 
 
 def _modules() -> list[tuple[str, str, str]]:
@@ -54,6 +56,7 @@ def _modules() -> list[tuple[str, str, str]]:
         ("prune", "bench_prune", "zone-map predicate pushdown"),
         ("expr", "bench_expr", "derived-expression tier"),
         ("cascade", "bench_cascade", "cascaded phase-1 execution"),
+        ("service", "bench_service", "async skim job service"),
         ("scaling", "bench_scaling", "beyond-paper scaling/overlap"),
     ]
 

@@ -20,6 +20,7 @@ from repro.cluster.coordinator import (
     ClusterCoordinator,
     ClusterError,
     ClusterSkimResult,
+    NodeTimeout,
     build_cluster,
     merge_responses,
 )
@@ -40,6 +41,7 @@ __all__ = [
     "ClusterSkimResult",
     "NodeFailure",
     "NodeResponse",
+    "NodeTimeout",
     "Shard",
     "ShardMap",
     "SkimResultCache",

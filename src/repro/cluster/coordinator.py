@@ -36,13 +36,14 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.cluster.cache import SkimResultCache, query_hash, versioned_key
 from repro.cluster.node import BatchResponse, NodeFailure, NodeResponse, StorageNode
-from repro.core.engine import Breakdown, SkimResult, _skipped_requests
+from repro.core.engine import Breakdown, SkimResult, _skipped_requests, drain
 from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
 from repro.core.zonemap import PRUNE, classify_span
@@ -53,6 +54,13 @@ CONCURRENCY_MODES = ("serial", "threads")
 
 class ClusterError(RuntimeError):
     """A shard could not be served by its primary or any replica."""
+
+
+class NodeTimeout(ClusterError):
+    """A shard blew its per-shard deadline (threads mode) and no replica
+    could cover for it.  Without a deadline a straggling node without a
+    replica hangs the whole gather forever — ``shard_timeout_s`` turns
+    that into this error (or a replica retry) instead."""
 
 
 @dataclass
@@ -220,6 +228,7 @@ class ClusterCoordinator:
         basket_events: int | None = None,
         codec: str | None = None,
         prune: bool = True,
+        shard_timeout_s: float | None = None,
     ):
         if not nodes:
             raise ValueError("need at least one storage node")
@@ -236,6 +245,10 @@ class ClusterCoordinator:
         # (DESIGN.md §9): a shard whose manifest proves zero survivors is
         # answered by the coordinator itself — no node, no cache traffic.
         self.prune = prune
+        if shard_timeout_s is not None and shard_timeout_s <= 0:
+            raise ValueError("shard_timeout_s must be positive (or None)")
+        # per-shard deadline for the threads gather; None = wait forever
+        self.shard_timeout_s = shard_timeout_s
         ref = nodes[0].shard.store
         self.basket_events = basket_events or ref.basket_events
         self.codec = codec or ref.codec
@@ -393,22 +406,91 @@ class ClusterCoordinator:
             )
         return resp
 
+    def _timeout_fallback(
+        self,
+        node: StorageNode,
+        query: Query,
+        qh: str,
+        retries: list[tuple[int, int, int]],
+    ) -> NodeResponse:
+        """A primary blew the shard deadline: retry on the replica, or
+        raise :class:`NodeTimeout`.  The replica runs on the gather
+        thread — a second deadline would need its own pool; one retry
+        per shard matches the :class:`NodeFailure` policy."""
+        replica = self.replicas.get(node.shard.shard_id)
+        if replica is None:
+            raise NodeTimeout(
+                f"shard {node.shard.shard_id}: node {node.node_id} "
+                f"exceeded the {self.shard_timeout_s}s shard deadline "
+                "and no replica is configured"
+            )
+        try:
+            resp = replica.execute(query)
+        except NodeFailure as exc:
+            raise NodeTimeout(
+                f"shard {node.shard.shard_id}: node {node.node_id} "
+                f"exceeded the {self.shard_timeout_s}s shard deadline "
+                "and the replica failed"
+            ) from exc
+        retries.append((node.shard.shard_id, node.node_id, replica.node_id))
+        if self.cache is not None:
+            self.cache.put(
+                versioned_key(qh, node.shard.manifest_hash),
+                resp,
+                nbytes=resp.result.extras.get(
+                    "output_bytes", resp.result.output.compressed_bytes()
+                ),
+                fetch_bytes=resp.result.stats.bytes_fetched,
+            )
+        return resp
+
+    def _gather_threads(self, query: Query, qh: str, retries):
+        """Scatter to the pool, yield responses in shard order as they
+        resolve, each bounded by ``shard_timeout_s``.  With a deadline
+        configured the pool is NOT joined on exit — a hung worker must
+        not block the gather that just timed it out."""
+        ex = ThreadPoolExecutor(max_workers=len(self.nodes))
+        try:
+            futs = [
+                ex.submit(self._serve_shard, node, query, qh, retries)
+                for node in self.nodes
+            ]
+            for node, fut in zip(self.nodes, futs):
+                try:
+                    yield fut.result(timeout=self.shard_timeout_s)
+                except FutureTimeout:
+                    yield self._timeout_fallback(node, query, qh, retries)
+        finally:
+            ex.shutdown(
+                wait=self.shard_timeout_s is None, cancel_futures=True
+            )
+
     def run(self, query: Query | dict | str) -> ClusterSkimResult:
+        return drain(self.iter_run(query))
+
+    def iter_run(self, query: Query | dict | str):
+        """Streaming form of :meth:`run`: a generator yielding each
+        shard's :class:`NodeResponse` (with its per-window survivor
+        ledger) as the gather progresses, in shard order, and returning
+        the merged :class:`ClusterSkimResult` as the generator's value
+        (``drain()`` recovers it).  Closing the generator between
+        shards abandons the remaining gather — the service layer's
+        cancellation point."""
         t0 = time.perf_counter()
         q, qh = self._compile_once(query)
         retries: list[tuple[int, int, int]] = []
 
         if self.concurrency == "threads":
-            with ThreadPoolExecutor(max_workers=len(self.nodes)) as ex:
-                futs = [
-                    ex.submit(self._serve_shard, node, q, qh, retries)
-                    for node in self.nodes
-                ]
-                responses = [f.result() for f in futs]
+            gather = self._gather_threads(q, qh, retries)
         else:
-            responses = [
-                self._serve_shard(node, q, qh, retries) for node in self.nodes
-            ]
+            gather = (
+                self._serve_shard(node, q, qh, retries)
+                for node in self.nodes
+            )
+        responses: list[NodeResponse] = []
+        for resp in gather:
+            responses.append(resp)
+            yield resp
 
         t_merge = time.perf_counter()
         output, n_input, n_passed = merge_responses(
@@ -601,6 +683,7 @@ def build_cluster(
     concurrency: str = "serial",
     prune: bool = True,
     cascade: bool = True,
+    shard_timeout_s: float | None = None,
     **node_kw,
 ) -> ClusterCoordinator:
     """Partition ``store`` over ``n_nodes`` storage nodes and wire up a
@@ -640,4 +723,5 @@ def build_cluster(
         basket_events=store.basket_events,
         codec=store.codec,
         prune=prune,
+        shard_timeout_s=shard_timeout_s,
     )

@@ -140,6 +140,44 @@ class SkimResult:
         return self.n_passed / max(self.n_input, 1)
 
 
+@dataclass
+class WindowPartial:
+    """One basket window's completed ledger entry, streamed mid-skim.
+
+    The executor yields one of these per window, in window order, as soon
+    as that window's phase 2 finishes (DESIGN.md §12).  ``cols`` holds the
+    window's survivor columns exactly as they will be concatenated into
+    the final output — so the union of a run's partials is bit-identical
+    to the synchronous result by construction.  ``n_passed == 0`` windows
+    still stream (empty ``cols``): the ledger entry is the progress
+    signal.
+    """
+
+    index: int  # window ordinal (0-based, ascending)
+    start: int
+    stop: int
+    n_passed: int
+    cols: dict  # branch -> survivor array ({} when nothing passed)
+    jagged: dict  # jagged branch -> counts branch, for `cols`
+    decision: str = SCAN  # zone-map kind this window resolved as
+
+
+def drain(gen):
+    """Drive a partial-yielding executor generator to its final result.
+
+    The streaming executors are generators that yield
+    :class:`WindowPartial` (or the shared-scan batch equivalent) per
+    window and *return* the final result object — ``drain`` is the
+    synchronous caller's one-liner to discard the stream and keep the
+    result.
+    """
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
+
+
 class _Timer:
     def __init__(self, breakdown: Breakdown, key: str):
         self.b, self.k = breakdown, key
@@ -425,6 +463,50 @@ class SkimEngine:
         prune: bool | None = None,
         cascade: bool | None = None,
     ) -> SkimResult:
+        plan, args = self._prepare(query, mode, fused, pipeline, prune, cascade)
+        if args is None:  # client_plain: the one-pass legacy path
+            return self._run_client_plain(plan)
+        return drain(self._iter_two_phase(plan, **args))
+
+    def iter_run(
+        self,
+        query: Query | dict | str,
+        mode: str = "near_data",
+        fused: bool | None = None,
+        pipeline: bool | str | None = None,
+        prune: bool | None = None,
+        cascade: bool | None = None,
+    ):
+        """Streaming form of :meth:`run`: a generator yielding one
+        :class:`WindowPartial` per basket window as its ledger entry
+        completes, and *returning* the final :class:`SkimResult` (via
+        ``StopIteration.value``; :func:`drain` recovers it).
+
+        This is the cooperative execution surface the async job service
+        schedules on (DESIGN.md §12): window boundaries are the
+        cancellation points, and the stream of partials is the partial-
+        result feed.  Identical accounting and output to :meth:`run` by
+        construction — ``run`` is ``drain(iter_run(...))``.
+        ``client_plain`` has no window loop and cannot stream.
+        """
+        plan, args = self._prepare(query, mode, fused, pipeline, prune, cascade)
+        if args is None:
+            raise ValueError("client_plain is a one-pass mode; nothing to stream")
+        return self._iter_two_phase(plan, **args)
+
+    def _prepare(
+        self,
+        query: Query | dict | str,
+        mode: str,
+        fused: bool | None,
+        pipeline: bool | str | None,
+        prune: bool | None,
+        cascade: bool | None,
+    ) -> tuple[SkimPlan, dict | None]:
+        """Shared argument resolution + planning for run / iter_run.
+
+        Returns ``(plan, two_phase_kwargs)``; ``None`` kwargs means
+        client_plain (the legacy one-pass path)."""
         if not isinstance(query, Query):
             query = parse_query(query)
         do_prune = (self.prune if prune is None else bool(prune)) and (
@@ -442,21 +524,20 @@ class SkimEngine:
             cascade=do_cascade,
         )
         if mode == "client_plain":
-            return self._run_client_plain(plan)
+            return plan, None
         if mode == "client_opt":
-            return self._run_two_phase(plan, mode, self.input_link, coalesce=True)
+            return plan, dict(mode=mode, link=self.input_link, coalesce=True)
         if mode == "server_side":
-            return self._run_two_phase(plan, mode, LOCAL_DISK, coalesce=False)
+            return plan, dict(mode=mode, link=LOCAL_DISK, coalesce=False)
         if mode == "near_data":
             prefetch = self.pipeline if pipeline is None else pipeline
             if prefetch not in (False, True, "threads"):
                 raise ValueError(
                     f"pipeline must be False, True, or 'threads', got {prefetch!r}"
                 )
-            return self._run_two_phase(
-                plan, mode, self.near_input_link, coalesce=True,
-                fused=use_fused,
-                prefetch=prefetch,
+            return plan, dict(
+                mode=mode, link=self.near_input_link, coalesce=True,
+                fused=use_fused, prefetch=prefetch,
             )
         raise ValueError(f"unknown mode {mode}")
 
@@ -492,7 +573,7 @@ class SkimEngine:
 
     # -- two-phase model (client_opt / server_side / near_data) ---------------
 
-    def _run_two_phase(
+    def _iter_two_phase(
         self,
         plan: SkimPlan,
         mode: str,
@@ -500,7 +581,9 @@ class SkimEngine:
         coalesce: bool,
         fused: bool = False,
         prefetch: bool | str = False,
-    ) -> SkimResult:
+    ):
+        """Generator core of the two-phase executor: yields a
+        :class:`WindowPartial` per window, returns the :class:`SkimResult`."""
         store, b, stats = self.store, Breakdown(), FetchStats()
         n = store.n_events
         chunk = self.chunk_events
@@ -697,6 +780,8 @@ class SkimEngine:
 
             k = int(mask.sum())
             window_rows.append((start, stop, k))
+            part_cols: dict = {}
+            part_jagged: dict = {}
             if k:
                 n_passed += k
                 if outcome is not None:
@@ -722,6 +807,7 @@ class SkimEngine:
                 jagged_map.update(jagged)
                 for k2, v in cols.items():
                     out_cols[k2].append(v)
+                part_cols, part_jagged = cols, jagged
             if outcome is not None:
                 # savings vs the preloading reference, ledgered AFTER both
                 # phases: a filter-branch basket counts as skipped only if
@@ -745,6 +831,13 @@ class SkimEngine:
                         "p2_requests": w2s.requests + w1s.requests,
                     }
                 )
+            # the window's ledger entry is complete: stream it.  A caller
+            # that stops consuming here (cancellation) has paid exactly
+            # the windows it saw — the accounting above is window-local.
+            yield WindowPartial(
+                index=wi, start=start, stop=stop, n_passed=k,
+                cols=part_cols, jagged=part_jagged, decision=kind,
+            )
         phase_wall = time.perf_counter() - t_phase
 
         phase1_bytes = stats.bytes_fetched  # pre-merge: phase-1 only

@@ -53,6 +53,7 @@ from repro.core.query import (
     ObjectSelection,
     Query,
 )
+from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN
 from repro.data.store import FetchStats, coalesced_requests
 
 # selectivity the cost model assumes when statistics prove nothing
@@ -287,6 +288,103 @@ def build_cascade(query: Query, store) -> CascadePlan | None:
         return None
     static_order = sorted(range(len(stages)), key=lambda i: (stages[i].rank, i))
     return CascadePlan(stages=stages, static_order=static_order)
+
+
+# ---------------------------------------------------------------------------
+# admission pricing: whole-plan byte estimate BEFORE anything runs
+# ---------------------------------------------------------------------------
+
+
+def estimate_plan_bytes(plan, store, window_events: int) -> dict:
+    """Price a :class:`~repro.core.planner.SkimPlan`'s fetch bytes before
+    executing it — the admission-control currency (DESIGN.md §12).
+
+    Pure metadata: basket sizes come from ``range_comp_bytes``, pass
+    rates from the cascade stages' zone-map-seeded selectivity estimates
+    (stage independence assumed), window skips from the plan's zone-map
+    decisions.  **Nothing is fetched or decoded** — a service can reject
+    a query on this price with zero bytes moved.
+
+    Per window: PRUNE windows cost nothing; ACCEPT_ALL windows pay the
+    one phase-2 output round; scanned windows pay the head stage in
+    full, each later cascade stage scaled by the estimated alive
+    fraction after its predecessors, and the phase-2 output-only set
+    scaled by the probability the window keeps a survivor.  Without a
+    cascade the full filter set is priced per window (the preload path).
+
+    Returns ``{"phase1", "phase2", "total", "requests", "per_stage",
+    "est_selectivity", "n_windows", "n_windows_pruned"}`` — bytes as
+    ints, ``per_stage`` keyed by cascade stage index in static order.
+    """
+    n = store.n_events
+    spans = [
+        (s, min(s + window_events, n)) for s in range(0, n, window_events)
+    ]
+    decisions = plan.window_decisions
+    cplan = plan.cascade
+    per_stage: dict[int, float] = (
+        {s.index: 0.0 for s in cplan.stages} if cplan is not None else {}
+    )
+    phase1 = phase2 = 0.0
+    requests = 0
+    pruned = 0
+    passed_est = 0.0
+    for wi, (a, b) in enumerate(spans):
+        kind = decisions[wi].decision if decisions is not None else SCAN
+        m = b - a
+        if kind == PRUNE:
+            pruned += 1
+            continue
+        if kind == ACCEPT_ALL:
+            nbytes, nb = store.range_comp_bytes(plan.output_branches, a, b)
+            phase2 += nbytes
+            requests += coalesced_requests(nbytes, nb, True)
+            passed_est += m
+            continue
+        if cplan is not None:
+            # the alive fraction prices later stages in the *correlated*
+            # limit (whole baskets live or die together) — the right
+            # prior for era-correlated HEP data, where conditions are
+            # constant within a basket; the independent limit would
+            # price every stage at its full preload cost
+            alive = 1.0
+            for si in cplan.static_order:
+                stage = cplan.stages[si]
+                nbytes, _ = store.range_comp_bytes(stage.branches, a, b)
+                # truncate per window so per_stage sums exactly to phase1
+                est = int(nbytes * alive)
+                per_stage[si] += est
+                phase1 += est
+                if est:
+                    requests += coalesced_requests(est, 0, True)
+                alive *= stage.est_selectivity
+            sel = alive
+        else:
+            nbytes, _ = store.range_comp_bytes(plan.filter_branches, a, b)
+            phase1 += nbytes
+            if nbytes:
+                requests += coalesced_requests(nbytes, 0, True)
+            sel = DEFAULT_SELECTIVITY ** max(
+                sum(len(stage) for _, stage in plan.query.stages()), 1
+            )
+        sel = min(max(sel, 0.0), 1.0)
+        passed_est += sel * m
+        # phase 2 moves the output-only set iff >= 1 event survives
+        p_alive = 1.0 - (1.0 - sel) ** max(m, 1)
+        nbytes, _ = store.range_comp_bytes(plan.output_only_branches, a, b)
+        phase2 += nbytes * p_alive
+        if nbytes and p_alive > 0.5:
+            requests += coalesced_requests(nbytes, 0, True)
+    return {
+        "phase1": int(phase1),
+        "phase2": int(phase2),
+        "total": int(phase1 + phase2),
+        "requests": int(requests),
+        "per_stage": {si: int(v) for si, v in per_stage.items()},
+        "est_selectivity": passed_est / max(n, 1),
+        "n_windows": len(spans),
+        "n_windows_pruned": pruned,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -653,5 +751,6 @@ __all__ = [
     "account_fetch",
     "build_cascade",
     "estimate_node_selectivity",
+    "estimate_plan_bytes",
     "mark_fetched",
 ]

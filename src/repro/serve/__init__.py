@@ -1,3 +1,56 @@
-from repro.serve.engine import SharedScanEngine, SharedScanResult
+"""Service layer: shared-scan batching + the async skim job service.
 
-__all__ = ["SharedScanEngine", "SharedScanResult"]
+:class:`SharedScanEngine` amortizes one phase-1 pass over a tenant
+batch (DESIGN.md §6); :class:`SkimService` (DESIGN.md §12) puts a job
+lifecycle in front of every backend — cost-based admission, per-tenant
+quotas, a weighted-fair queue, and window-granular streaming of partial
+results.
+"""
+
+from repro.serve.engine import BatchWindowPartial, SharedScanEngine, SharedScanResult
+from repro.serve.jobs import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    PENDING,
+    REJECTED,
+    RUNNING,
+    TERMINAL,
+    CostEstimate,
+    ManualClock,
+    PartialResult,
+    SkimJob,
+    TenantQuota,
+    price_query,
+    union_columns,
+)
+from repro.serve.service import (
+    ClusterBackend,
+    DeterministicExecutor,
+    EngineBackend,
+    SkimService,
+)
+
+__all__ = [
+    "CANCELLED",
+    "DONE",
+    "FAILED",
+    "PENDING",
+    "REJECTED",
+    "RUNNING",
+    "TERMINAL",
+    "BatchWindowPartial",
+    "ClusterBackend",
+    "CostEstimate",
+    "DeterministicExecutor",
+    "EngineBackend",
+    "ManualClock",
+    "PartialResult",
+    "SharedScanEngine",
+    "SharedScanResult",
+    "SkimJob",
+    "SkimService",
+    "TenantQuota",
+    "price_query",
+    "union_columns",
+]

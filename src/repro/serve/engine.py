@@ -29,6 +29,7 @@ from repro.core.engine import (
     Breakdown,
     NetworkModel,
     SkimResult,
+    WindowPartial,
     _concat_output,
     _decode_branches,
     _select_columns,
@@ -36,6 +37,7 @@ from repro.core.engine import (
     _Timer,
     _window_phase2,
     _write_output,
+    drain,
 )
 from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
@@ -45,6 +47,22 @@ from repro.data.store import EventStore, FetchStats, WindowPrefetcher
 # ---------------------------------------------------------------------------
 # shared-scan skim service
 # ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchWindowPartial:
+    """One basket window of a shared scan, streamed per tenant.
+
+    ``tenants[i]`` is tenant *i*'s :class:`~repro.core.engine.WindowPartial`
+    for this window — survivor columns exactly as they will land in that
+    tenant's final output, so per-tenant unions of streamed partials are
+    bit-identical to the batch result by construction (DESIGN.md §12).
+    """
+
+    index: int
+    start: int
+    stop: int
+    tenants: list  # per tenant, request order: WindowPartial
 
 
 @dataclass
@@ -119,6 +137,16 @@ class SharedScanEngine:
         self.pipeline = pipeline
 
     def run_batch(self, queries: list[Query | dict | str]) -> SharedScanResult:
+        return drain(self.iter_batch(queries))
+
+    def iter_batch(self, queries: list[Query | dict | str]):
+        """Streaming form of :meth:`run_batch`: a generator yielding one
+        :class:`BatchWindowPartial` per basket window (every tenant's
+        ledger entry for that window together, since the scan is shared)
+        and returning the final :class:`SharedScanResult`.  Window
+        boundaries are the job service's cancellation points; a tenant
+        cancelled mid-batch simply stops collecting its partials — the
+        shared pass is one fetch either way (DESIGN.md §12)."""
         from repro.core.neardata import fused_window_skim, window_pad_K
         from repro.core.plan import CascadeExecutor, mark_fetched, unfetched_bytes
 
@@ -223,6 +251,13 @@ class SharedScanEngine:
             ledger: dict[str, set] = {}
             if data is not None:
                 mark_fetched(store, load_union, start, stop, ledger)
+            tenant_parts: list[WindowPartial] = [
+                WindowPartial(
+                    index=wi, start=start, stop=stop, n_passed=0,
+                    cols={}, jagged={}, decision=_tenant_kind(i, wi),
+                )
+                for i in range(len(plans))
+            ]
             for i, plan in enumerate(plans):
                 b = per_b[i]
                 ex = executors[i]
@@ -309,6 +344,7 @@ class SharedScanEngine:
                                     mask &= eval_stage(stage, data, m)
                 k = int(mask.sum())
                 window_rows[i].append((start, stop, k))
+                tenant_parts[i].n_passed = k
                 if k == 0:
                     continue
                 n_passed[i] += k
@@ -334,6 +370,8 @@ class SharedScanEngine:
                 jagged_maps[i].update(jagged)
                 for k2, v in cols.items():
                     out_cols[i][k2].append(v)
+                tenant_parts[i].cols = cols
+                tenant_parts[i].jagged = jagged
             if data is not None and executors and all(
                 ex is not None for ex in executors
             ):
@@ -346,6 +384,9 @@ class SharedScanEngine:
                 shared_stats.cascade_bytes_skipped += unfetched_bytes(
                     store, union, start, stop, ledger
                 )
+            yield BatchWindowPartial(
+                index=wi, start=start, stop=stop, tenants=tenant_parts
+            )
 
         # phase-1 link time is paid once for the whole batch
         shared_b.fetch = self.input_link.transfer_time(

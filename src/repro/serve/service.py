@@ -1,0 +1,581 @@
+"""Async skim job service: queue, cost-based admission, streaming (DESIGN.md §12).
+
+Every engine in this repo is a synchronous library call; this module is
+the *service* a multi-tenant front door needs (ROADMAP item 1): jobs are
+submitted, priced, admitted against per-tenant quotas, scheduled through
+a weighted-fair queue, executed cooperatively one basket window per
+quantum, and streamed back window-granular partial results as each
+window's ledger entry completes.
+
+Design pillars:
+
+  * **Cost-based admission.**  :func:`~repro.serve.jobs.price_query`
+    prices each submission with the cascade cost model *before* it runs
+    (basket metadata only).  Over-quota submissions are REJECTED with
+    the priced estimate attached and provably zero bytes fetched.
+  * **Weighted-fair queueing.**  Each admitted job gets a virtual
+    finish time ``vstart + priced_cost / tenant_weight`` (``vstart``
+    continues the tenant's backlog); every quantum runs the job with
+    the smallest one.  Cheap queries from other tenants therefore
+    schedule ahead of — and preempt, at window boundaries — an
+    expensive query instead of queueing behind it.
+  * **Cooperative execution.**  The engines' streaming generators
+    (:meth:`SkimEngine.iter_run`, :meth:`SharedScanEngine.iter_batch`,
+    :meth:`ClusterCoordinator.iter_run`) advance one window (or shard)
+    per quantum.  Window boundaries are the cancellation points, and
+    every yielded partial is appended to ``job.partials`` immediately —
+    the union of a completed job's partials is bit-identical to the
+    synchronous result by construction.
+  * **Determinism.**  One thread, an injectable
+    :class:`~repro.serve.jobs.ManualClock`, and a
+    :class:`DeterministicExecutor` that records every scheduling
+    decision in a replayable trace.  No sleeps anywhere; tests replay
+    schedules exactly.
+  * **Batch coalescing.**  With ``batching=True``, compatible queued
+    jobs start as ONE :meth:`SharedScanEngine.iter_batch` pass —
+    phase 1 amortizes across tenants while each job still streams its
+    own partials and finishes with its own bit-identical result.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+
+from repro.core.engine import SkimEngine, WindowPartial
+from repro.serve.engine import SharedScanEngine
+from repro.serve.jobs import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    PENDING,
+    REJECTED,
+    RUNNING,
+    CostEstimate,
+    ManualClock,
+    PartialResult,
+    SkimJob,
+    TenantQuota,
+    price_query,
+)
+
+#: bytes per unit of virtual time (WFQ cost currency: priced megabytes)
+COST_SCALE_BYTES = 1e6
+
+
+# ---------------------------------------------------------------------------
+# backends: where a job actually executes
+# ---------------------------------------------------------------------------
+
+
+class EngineBackend:
+    """Single-store backend: solo jobs run on
+    :meth:`SkimEngine.iter_run`, coalesced batches on
+    :meth:`SharedScanEngine.iter_batch` — both stream
+    :class:`~repro.core.engine.WindowPartial` per basket window."""
+
+    supports_batch = True
+
+    def __init__(
+        self,
+        store,
+        engine: SkimEngine | None = None,
+        shared: SharedScanEngine | None = None,
+        mode: str = "near_data",
+        **engine_kw,
+    ):
+        self.store = store
+        self.engine = engine or SkimEngine(store, **engine_kw)
+        self.shared = shared or SharedScanEngine(
+            store,
+            chunk_events=self.engine.chunk_events,
+            fused=self.engine.fused,
+            prune=self.engine.prune,
+            cascade=self.engine.cascade,
+        )
+        self.mode = mode
+
+    def price(self, query) -> CostEstimate:
+        return price_query(
+            query,
+            self.store,
+            window_events=self.engine.chunk_events,
+            link=self.engine.near_input_link,
+        )
+
+    def start(self, query):
+        return self.engine.iter_run(query, mode=self.mode)
+
+    def start_batch(self, queries):
+        return self.shared.iter_batch(queries)
+
+
+class ClusterBackend:
+    """Scatter-gather backend: a job fans out over the coordinator's
+    shards and streams one partial per *shard* response (each carrying
+    its per-window ledger) as the gather progresses."""
+
+    supports_batch = False
+
+    def __init__(self, coordinator):
+        self.coordinator = coordinator
+
+    def price(self, query) -> CostEstimate:
+        parts = [
+            price_query(
+                query,
+                node.shard.store,
+                window_events=node.shard.window_events,
+                link=node.near_input_link,
+            )
+            for node in self.coordinator.nodes
+        ]
+        per_stage: dict[int, int] = {}
+        for p in parts:
+            for si, v in p.per_stage.items():
+                per_stage[si] = per_stage.get(si, 0) + v
+        n_events = sum(
+            node.shard.store.n_events for node in self.coordinator.nodes
+        )
+        return CostEstimate(
+            est_bytes=sum(p.est_bytes for p in parts),
+            est_phase1_bytes=sum(p.est_phase1_bytes for p in parts),
+            est_phase2_bytes=sum(p.est_phase2_bytes for p in parts),
+            est_requests=sum(p.est_requests for p in parts),
+            # shards serve in parallel: the modeled wall is the slowest
+            est_wall_s=max((p.est_wall_s for p in parts), default=0.0),
+            est_selectivity=(
+                sum(
+                    p.est_selectivity * node.shard.store.n_events
+                    for p, node in zip(parts, self.coordinator.nodes)
+                )
+                / max(n_events, 1)
+            ),
+            n_windows=sum(p.n_windows for p in parts),
+            n_windows_pruned=sum(p.n_windows_pruned for p in parts),
+            per_stage=per_stage,
+        )
+
+    def start(self, query):
+        return self._gen(query)
+
+    def _gen(self, query):
+        it = self.coordinator.iter_run(query)
+        while True:
+            try:
+                resp = next(it)
+            except StopIteration as stop:
+                return stop.value
+            rows = resp.result.extras.get("window_rows", [])
+            yield WindowPartial(
+                index=resp.shard_id,
+                start=rows[0][0] if rows else 0,
+                stop=rows[-1][1] if rows else 0,
+                n_passed=resp.result.n_passed,
+                cols={},
+                jagged={},
+                decision=f"shard:{resp.shard_id}",
+            )
+
+
+# ---------------------------------------------------------------------------
+# scheduler internals
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _TenantState:
+    quota: TenantQuota
+    reserved_bytes: float = 0.0  # priced bytes of admitted, unfinished jobs
+    spent_bytes: float = 0.0  # observed bytes of finished jobs
+    reserved_wall_s: float = 0.0
+    spent_wall_s: float = 0.0
+    vlast: float = 0.0  # tenant's last virtual finish (backlog tail)
+
+
+@dataclass
+class _Run:
+    """One open executor generator: a solo job or a coalesced batch."""
+
+    gen: object
+    jobs: list[SkimJob]
+    batch: bool = False
+    windows: int = 0  # quanta advanced so far
+
+
+class DeterministicExecutor:
+    """Single-threaded cooperative quantum runner.
+
+    The injectable executor seam: the service hands it one quantum
+    (advance one run unit by one window) at a time, and it records a
+    replayable trace of every scheduling decision —
+    ``(quantum, picked_job_id, run_member_ids)``.  Single-threaded by
+    construction, so two runs over the same submissions make identical
+    decisions in identical order.
+    """
+
+    def __init__(self):
+        self.trace: list[tuple[int, int, tuple[int, ...]]] = []
+        self.quanta = 0
+
+    def run_quantum(self, fn, picked: int, members: tuple[int, ...]):
+        self.quanta += 1
+        self.trace.append((self.quanta, picked, members))
+        return fn()
+
+
+# ---------------------------------------------------------------------------
+# the service
+# ---------------------------------------------------------------------------
+
+
+class SkimService:
+    """Multi-tenant async skim job service over one execution backend.
+
+    ``backend`` is an :class:`EngineBackend` (single store; supports
+    batch coalescing) or :class:`ClusterBackend` (scatter-gather).  A
+    bare :class:`~repro.data.store.EventStore` is wrapped in an
+    :class:`EngineBackend` for convenience.  ``quotas`` maps tenant
+    name -> :class:`~repro.serve.jobs.TenantQuota`; unknown tenants get
+    the (unlimited, weight-1) default.  ``clock`` and ``executor`` are
+    the deterministic seams — inject your own to control timestamps and
+    observe scheduling.
+
+    The service is cooperative and single-threaded: nothing executes
+    until :meth:`step` (one scheduling quantum = one basket window of
+    one job), :meth:`run_until_idle`, :meth:`result`, or
+    :meth:`stream` drives it.
+    """
+
+    def __init__(
+        self,
+        backend,
+        quotas: dict[str, TenantQuota] | None = None,
+        clock: ManualClock | None = None,
+        executor: DeterministicExecutor | None = None,
+        batching: bool = False,
+    ):
+        if not hasattr(backend, "start"):
+            backend = EngineBackend(backend)
+        self.backend = backend
+        self.quotas = dict(quotas or {})
+        self.clock = clock or ManualClock()
+        self.executor = executor or DeterministicExecutor()
+        self.batching = batching and backend.supports_batch
+        self.jobs: dict[int, SkimJob] = {}
+        self._tenants: dict[str, _TenantState] = {}
+        self._runs: dict[int, _Run] = {}  # job_id -> its run unit
+        self._ids = itertools.count(1)
+        self._seq = itertools.count()
+        self._vtime = 0.0  # virtual time of the last service start
+
+    # -- tenants -------------------------------------------------------------
+
+    def _tenant(self, name: str) -> _TenantState:
+        if name not in self._tenants:
+            self._tenants[name] = _TenantState(
+                self.quotas.get(name, TenantQuota())
+            )
+        return self._tenants[name]
+
+    def tenant_usage(self, name: str) -> dict:
+        ts = self._tenant(name)
+        return {
+            "reserved_bytes": ts.reserved_bytes,
+            "spent_bytes": ts.spent_bytes,
+            "reserved_wall_s": ts.reserved_wall_s,
+            "spent_wall_s": ts.spent_wall_s,
+            "byte_budget": ts.quota.byte_budget,
+            "wall_budget_s": ts.quota.wall_budget_s,
+            "weight": ts.quota.weight,
+        }
+
+    # -- submission / admission ----------------------------------------------
+
+    def submit(self, query, tenant: str = "default") -> SkimJob:
+        """Price, admit (or reject), and enqueue one query.
+
+        Never blocks and never fetches: pricing is basket metadata only.
+        The returned job is PENDING (admitted — it will run when the
+        fair queue reaches it) or REJECTED (``job.error`` says why,
+        ``job.estimate`` carries the price that condemned it, and
+        ``job.stats`` is all-zero).
+        """
+        job = SkimJob(
+            job_id=next(self._ids),
+            tenant=tenant,
+            query=query,
+            submitted_at=self.clock.now(),
+            seq=next(self._seq),
+        )
+        self.jobs[job.job_id] = job
+        ts = self._tenant(tenant)
+        try:
+            est = self.backend.price(query)
+        except Exception as exc:  # malformed query: reject at the door
+            return self._reject(job, f"unpriceable query: {exc}")
+        job.estimate = est
+        q = ts.quota
+        byte_used = ts.reserved_bytes + ts.spent_bytes
+        if byte_used + est.est_bytes > q.byte_budget:
+            return self._reject(
+                job,
+                f"over byte quota: priced {est.est_bytes} B, "
+                f"{q.byte_budget - byte_used:.0f} B left of "
+                f"{q.byte_budget:.0f} B budget ({est.describe()})",
+            )
+        wall_used = ts.reserved_wall_s + ts.spent_wall_s
+        if wall_used + est.est_wall_s > q.wall_budget_s:
+            return self._reject(
+                job,
+                f"over wall-clock quota: priced {est.est_wall_s:.4f} s, "
+                f"{q.wall_budget_s - wall_used:.4f} s left of "
+                f"{q.wall_budget_s:.4f} s budget ({est.describe()})",
+            )
+        ts.reserved_bytes += est.est_bytes
+        ts.reserved_wall_s += est.est_wall_s
+        # weighted-fair virtual finish: continue the tenant's backlog,
+        # never start in the past
+        cost = est.est_bytes / COST_SCALE_BYTES
+        vstart = max(self._vtime, ts.vlast)
+        job.vfinish = vstart + cost / max(q.weight, 1e-9)
+        ts.vlast = job.vfinish
+        return job
+
+    def _reject(self, job: SkimJob, reason: str) -> SkimJob:
+        job.state = REJECTED
+        job.error = reason
+        job.finished_at = self.clock.now()
+        return job
+
+    # -- cancellation --------------------------------------------------------
+
+    def cancel(self, job_id: int) -> bool:
+        """Cancel a job.  PENDING jobs leave the queue immediately;
+        RUNNING jobs stop at the current window boundary (cooperative —
+        the service is between quanta whenever this can be called), keep
+        the partials they already streamed, and settle CANCELLED.  A
+        batch member's cancellation never aborts the shared pass the
+        other tenants are riding.  Returns ``False`` for jobs already
+        terminal."""
+        job = self.jobs[job_id]
+        if job.terminal:
+            return False
+        job.cancel_requested = True
+        if job.state == RUNNING:
+            run = self._runs.pop(job.job_id, None)
+            if run is not None and not run.batch:
+                run.gen.close()
+        self._settle(job, CANCELLED)
+        return True
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _runnable(self) -> SkimJob | None:
+        """The weighted-fair pick: smallest virtual finish time wins,
+        submission order breaks ties."""
+        best = None
+        for job in self.jobs.values():
+            if job.state in (PENDING, RUNNING):
+                key = (job.vfinish, job.seq)
+                if best is None or key < (best.vfinish, best.seq):
+                    best = job
+        return best
+
+    def step(self) -> bool:
+        """Run ONE scheduling quantum: pick the fair-queue head, advance
+        its run unit by one basket window (starting it first if
+        pending), deliver the streamed partial.  Returns ``False`` when
+        no job is runnable (the service is idle)."""
+        job = self._runnable()
+        if job is None:
+            return False
+        run = self._runs.get(job.job_id)
+        if run is None:
+            run = self._start(job)
+            if run is None:  # start itself failed -> job already settled
+                return True
+        members = tuple(j.job_id for j in run.jobs)
+        self.executor.run_quantum(
+            lambda: self._advance(run), job.job_id, members
+        )
+        return True
+
+    def run_until_idle(self, max_quanta: int = 1_000_000) -> int:
+        """Drive quanta until every job is terminal; returns how many ran."""
+        n = 0
+        while self.step():
+            n += 1
+            if n >= max_quanta:
+                raise RuntimeError(
+                    f"service still busy after {max_quanta} quanta"
+                )
+        return n
+
+    def result(self, job_id: int) -> SkimJob:
+        """Drive the service until ``job_id`` is terminal; return it."""
+        job = self.jobs[job_id]
+        while not job.terminal and self.step():
+            pass
+        return job
+
+    def stream(self, job_id: int):
+        """Generator of the job's :class:`PartialResult`\\ s, driving the
+        scheduler as needed: yields each streamed window as soon as the
+        fair queue lets the job produce it, ends when the job is
+        terminal.  Other tenants' quanta interleave underneath — this is
+        the subscriber's view of one job, not a private executor."""
+        job = self.jobs[job_id]
+        i = 0
+        while True:
+            while i < len(job.partials):
+                yield job.partials[i]
+                i += 1
+            if job.terminal or not self.step():
+                return
+
+    # -- run units -----------------------------------------------------------
+
+    def _start(self, job: SkimJob) -> _Run | None:
+        """Open the executor generator for a pending job — or, with
+        batching on, for EVERY pending job as one coalesced shared
+        scan."""
+        now = self.clock.now()
+        if self.batching:
+            members = sorted(
+                (j for j in self.jobs.values() if j.state == PENDING),
+                key=lambda j: (j.vfinish, j.seq),
+            )
+        else:
+            members = [job]
+        try:
+            if len(members) > 1:
+                gen = self.backend.start_batch([j.query for j in members])
+                run = _Run(gen=gen, jobs=members, batch=True)
+            else:
+                members = [job]
+                gen = self.backend.start(job.query)
+                run = _Run(gen=gen, jobs=members)
+        except Exception as exc:
+            job.error = f"{type(exc).__name__}: {exc}"
+            self._settle(job, FAILED)
+            return None
+        for j in run.jobs:
+            j.state = RUNNING
+            j.started_at = now
+            self._runs[j.job_id] = run
+        # virtual time advances to the service start of the picked job
+        self._vtime = max(self._vtime, job.vfinish)
+        return run
+
+    def _advance(self, run: _Run) -> None:
+        """One quantum: advance the generator one window and dispatch."""
+        try:
+            part = next(run.gen)
+        except StopIteration as stop:
+            self._finish(run, stop.value)
+        except Exception as exc:
+            self._fail(run, exc)
+        else:
+            run.windows += 1
+            self._deliver(run, part)
+
+    def _deliver(self, run: _Run, part) -> None:
+        if run.batch:
+            for i, j in enumerate(run.jobs):
+                if j.state == RUNNING:
+                    self._append_partial(j, part.tenants[i])
+        else:
+            self._append_partial(run.jobs[0], part)
+
+    def _append_partial(self, job: SkimJob, wp: WindowPartial) -> None:
+        job.partials.append(
+            PartialResult(
+                job_id=job.job_id,
+                seq=len(job.partials),
+                start=wp.start,
+                stop=wp.stop,
+                n_passed=wp.n_passed,
+                cols=wp.cols,
+                jagged=wp.jagged,
+                meta={"decision": wp.decision, "window": wp.index},
+            )
+        )
+
+    def _finish(self, run: _Run, value) -> None:
+        if run.batch:
+            results = value.results  # SharedScanResult, request order
+            for i, j in enumerate(run.jobs):
+                if j.state != RUNNING:
+                    continue  # cancelled mid-batch: already settled
+                j.result = results[i]
+                self._runs.pop(j.job_id, None)
+                self._settle(j, DONE)
+        else:
+            job = run.jobs[0]
+            job.result = value
+            self._runs.pop(job.job_id, None)
+            self._settle(job, DONE)
+
+    def _fail(self, run: _Run, exc: Exception) -> None:
+        cause = f"{type(exc).__name__}: {exc}"
+        for j in run.jobs:
+            self._runs.pop(j.job_id, None)
+            if not j.terminal:
+                j.error = cause
+                self._settle(j, FAILED)
+
+    def _settle(self, job: SkimJob, state: str) -> None:
+        """Terminal-state bookkeeping: release the admission
+        reservation; DONE jobs charge their *observed* ledger (the
+        estimate trues up against reality, so a tenant's budget drains
+        by what it actually moved)."""
+        job.state = state
+        job.finished_at = self.clock.now()
+        ts = self._tenant(job.tenant)
+        if job.estimate is not None:
+            ts.reserved_bytes -= job.estimate.est_bytes
+            ts.reserved_wall_s -= job.estimate.est_wall_s
+        if state == DONE and job.result is not None:
+            ts.spent_bytes += job.result.stats.bytes_fetched
+            ts.spent_wall_s += _modeled_seconds(job.result)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def trace(self):
+        """The executor's replayable decision log."""
+        return self.executor.trace
+
+    def queue_depth(self) -> int:
+        return sum(
+            1 for j in self.jobs.values() if j.state in (PENDING, RUNNING)
+        )
+
+    def describe(self) -> str:
+        by_state: dict[str, int] = {}
+        for j in self.jobs.values():
+            by_state[j.state] = by_state.get(j.state, 0) + 1
+        states = ", ".join(f"{k}={v}" for k, v in sorted(by_state.items()))
+        return (
+            f"SkimService({states or 'empty'}, "
+            f"quanta={self.executor.quanta}, batching={self.batching})"
+        )
+
+
+def _modeled_seconds(result) -> float:
+    """A finished job's modeled wall-clock, in the same currency the
+    admission estimate priced (link + measured stages)."""
+    total = getattr(result, "modeled_total_s", None)  # ClusterSkimResult
+    if total is not None:
+        return total
+    return result.extras.get("pipeline_total", result.breakdown.total())
+
+
+__all__ = [
+    "COST_SCALE_BYTES",
+    "ClusterBackend",
+    "DeterministicExecutor",
+    "EngineBackend",
+    "SkimService",
+]

@@ -331,3 +331,90 @@ def test_cache_lru_eviction_and_accounting():
     assert 0 < cache.stats.hit_rate < 1
     cache.clear()
     assert len(cache) == 0 and cache.stats.stored_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# per-shard deadline (threads mode): NodeTimeout + replica fallback
+# ---------------------------------------------------------------------------
+
+
+def _hang_node(node):
+    """Replace a node's execute with one that blocks until released.
+
+    Returns the release event; the hung call returns (on a detached
+    worker thread) once the test sets it, so nothing leaks past the
+    test even though the coordinator deliberately does not join it."""
+    import threading
+
+    release = threading.Event()
+    orig = node.execute
+
+    def blocked(query):
+        release.wait()
+        return orig(query)
+
+    node.execute = blocked
+    return release
+
+
+def test_shard_timeout_raises_node_timeout(store, shards3):
+    """A straggling primary without a replica used to hang the threaded
+    gather forever; with a deadline it surfaces as NodeTimeout."""
+    from repro.cluster import NodeTimeout
+
+    nodes = [StorageNode(sh) for sh in shards3]
+    coord = ClusterCoordinator(
+        nodes,
+        replicas={},
+        concurrency="threads",
+        basket_events=store.basket_events,
+        codec=store.codec,
+        shard_timeout_s=0.05,
+    )
+    release = _hang_node(nodes[1])
+    try:
+        with pytest.raises(NodeTimeout, match="shard 1.*no replica"):
+            coord.run(QUERY)
+    finally:
+        release.set()
+
+
+def test_shard_timeout_falls_back_to_replica(store, shards3, reference):
+    """With a replica configured the deadline degrades gracefully: the
+    replica serves the shard, the retry is ledgered, and the merged
+    result stays bit-identical."""
+    nodes = [StorageNode(sh) for sh in shards3]
+    replicas = {
+        sh.shard_id: StorageNode(sh, node_id=100 + sh.shard_id)
+        for sh in shards3
+    }
+    coord = ClusterCoordinator(
+        nodes,
+        replicas=replicas,
+        concurrency="threads",
+        basket_events=store.basket_events,
+        codec=store.codec,
+        shard_timeout_s=0.05,
+    )
+    release = _hang_node(nodes[0])
+    try:
+        res = coord.run(QUERY)
+    finally:
+        release.set()
+    assert res.retries == [(0, nodes[0].node_id, replicas[0].node_id)]
+    _assert_same_output(res, reference)
+
+
+def test_shard_timeout_validation(store, shards3):
+    with pytest.raises(ValueError, match="shard_timeout_s"):
+        ClusterCoordinator(
+            [StorageNode(sh) for sh in shards3], shard_timeout_s=0.0
+        )
+
+
+def test_no_timeout_waits_indefinitely_by_default(store, shards3, reference):
+    """Without a deadline configured, threads mode behaves exactly as
+    before (waits for every shard, joins the pool)."""
+    coord = _coord(shards3, store, concurrency="threads")
+    assert coord.shard_timeout_s is None
+    _assert_same_output(coord.run(QUERY), reference)

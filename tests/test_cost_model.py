@@ -1,0 +1,153 @@
+"""Cost-model accuracy regression (ISSUE 6 satellite).
+
+The service's admission control rejects queries using
+:func:`repro.core.plan.estimate_plan_bytes` — a priced estimate computed
+from basket metadata alone.  If that model silently drifts away from
+what the executor actually fetches, quotas become meaningless (a 100x
+underestimate admits everything; a 100x overestimate rejects
+everything).  This test pins the estimate against the observed ledger on
+the bench_cascade era-correlated store — the adversarial workload where
+zone maps prune nothing and only the cascade's alive-fraction model
+does any work — with deliberately loose but *bounded* tolerances.
+
+Pinned baseline on this store (n=20k): observed 1,068,856 B fetched over
+22 requests vs 502,949 B / 30 requests priced — the correlated-limit
+alive-fraction model underestimates by ~2x (it assumes perfectly
+correlated stage survival; reality is messier).  The tolerances below
+give that headroom without letting an order-of-magnitude drift through.
+"""
+
+import pytest
+
+from benchmarks.bench_cascade import QUERY, _make_store
+from repro.core.engine import SkimEngine
+from repro.serve import price_query
+
+N_EVENTS = 20_000  # smoke-sized: 5 windows of the era-correlated store
+
+
+@pytest.fixture(scope="module")
+def store():
+    return _make_store(N_EVENTS)
+
+
+@pytest.fixture(scope="module")
+def engine(store):
+    return SkimEngine(store, prune=True, cascade=True)
+
+
+@pytest.fixture(scope="module")
+def observed(engine):
+    return engine.run(QUERY, mode="near_data")
+
+
+@pytest.fixture(scope="module")
+def estimate(engine, store):
+    return price_query(
+        QUERY,
+        store,
+        window_events=engine.chunk_events,
+        link=engine.near_input_link,
+    )
+
+
+def test_estimate_is_metadata_only(store):
+    fetches = []
+    orig = store.fetch_window
+
+    def spy(*args, **kwargs):
+        fetches.append(args)
+        return orig(*args, **kwargs)
+
+    store.fetch_window = spy
+    try:
+        price_query(QUERY, store)
+    finally:
+        store.fetch_window = orig
+    assert fetches == []
+
+
+def test_total_bytes_within_pinned_tolerance(estimate, observed):
+    obs = observed.stats.bytes_fetched
+    assert obs > 0
+    ratio = estimate.est_bytes / obs
+    # correlated-limit model: allowed to undershoot ~2x, never 5x; and
+    # never to overshoot 2x (that would start rejecting good queries)
+    assert 0.2 <= ratio <= 2.0, (
+        f"cost model drifted: priced {estimate.est_bytes} B vs "
+        f"observed {obs} B (ratio {ratio:.2f})"
+    )
+
+
+def test_requests_within_pinned_tolerance(estimate, observed):
+    obs = observed.stats.requests
+    assert obs > 0
+    ratio = estimate.est_requests / obs
+    assert 0.5 <= ratio <= 2.5, (
+        f"request model drifted: priced {estimate.est_requests} vs "
+        f"observed {obs} (ratio {ratio:.2f})"
+    )
+
+
+def test_per_stage_bytes_within_pinned_tolerance(estimate, observed):
+    """Each cascade stage's priced bytes tracks its observed fetch.
+
+    The pinned head stage reports ``bytes_fetched == 0`` in the ledger
+    (the window prefetcher accounts its load), so only the demand-paged
+    tail stages are comparable here.
+    """
+    stages = observed.extras["cascade_stages"]
+    assert stages, "cascade did not run"
+    compared = 0
+    for st in stages:
+        obs = st["bytes_fetched"]
+        if obs == 0:
+            continue  # prefetcher-accounted head stage
+        est = estimate.per_stage.get(st["stage"])
+        assert est is not None, f"stage {st['stage']} missing from estimate"
+        ratio = est / obs
+        assert 0.1 <= ratio <= 4.0, (
+            f"stage {st['stage']} ({st['branches']}): priced {est} B vs "
+            f"observed {obs} B (ratio {ratio:.2f})"
+        )
+        compared += 1
+    assert compared >= 3  # presel, object, and the heavy tail stages
+
+
+def test_model_ranks_the_heavy_stage_heaviest(estimate, observed):
+    """Admission explanations hinge on the byte *ranking*: the stage the
+    model prices heaviest must be the stage that actually dominated."""
+    stages = [
+        st for st in observed.extras["cascade_stages"]
+        if st["bytes_fetched"] > 0
+    ]
+    obs_heaviest = max(stages, key=lambda st: st["bytes_fetched"])["stage"]
+    est_heaviest = max(
+        (si for si in estimate.per_stage if si != _head_stage(observed)),
+        key=lambda si: estimate.per_stage[si],
+    )
+    assert est_heaviest == obs_heaviest
+
+
+def _head_stage(observed) -> int:
+    return next(
+        st["stage"]
+        for st in observed.extras["cascade_stages"]
+        if st["bytes_fetched"] == 0
+    )
+
+
+def test_estimate_internally_consistent(estimate):
+    assert estimate.est_bytes == (
+        estimate.est_phase1_bytes + estimate.est_phase2_bytes
+    )
+    assert estimate.est_phase1_bytes == sum(estimate.per_stage.values())
+    assert estimate.n_windows == 5
+    assert 0.0 < estimate.est_selectivity < 1.0
+    assert estimate.est_wall_s > 0.0
+    assert "MB" in estimate.describe()
+
+
+def test_selectivity_estimate_tracks_observed(estimate, observed):
+    # within one order of magnitude — it drives the phase-2 pricing
+    assert 0.1 <= estimate.est_selectivity / observed.selectivity <= 10.0
