@@ -12,12 +12,13 @@ test:  ## tier-1 suite
 bench:  ## full benchmark harness (CSV on stdout)
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + service; the CI step).  Emits BENCH_<pr>.json.
+smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + service + obs; the CI step).  Emits BENCH_<pr>.json + BENCH_<pr>_trace.json.
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --smoke --json \
-		--only pipeline,cluster,prune,expr,cascade,service
+		--only pipeline,cluster,prune,expr,cascade,service,obs
 
 lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
-	ruff check src tests benchmarks examples
+	ruff check src tests benchmarks examples tools
+	$(PY) tools/check_extras.py
 
 quickstart:
 	$(PY) examples/quickstart.py

@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              fused+pruned preload path),
              bench_service (async job service: time-to-first-partial
              vs blocking, admission pricing, queue throughput),
+             bench_obs (trace/metrics layer: no-op tracer overhead
+             bound + deterministic Chrome-trace export of a traced
+             service drain),
              bench_scaling (multi-shard)
 
 Module selection (CI and the 2-core dev host pay for one figure, not the
@@ -40,7 +43,7 @@ import sys
 import time
 
 # the PR this tree's benchmark artifact belongs to (BENCH_<pr>.json)
-PR_NUMBER = 6
+PR_NUMBER = 7
 
 
 def _modules() -> list[tuple[str, str, str]]:
@@ -57,6 +60,7 @@ def _modules() -> list[tuple[str, str, str]]:
         ("expr", "bench_expr", "derived-expression tier"),
         ("cascade", "bench_cascade", "cascaded phase-1 execution"),
         ("service", "bench_service", "async skim job service"),
+        ("obs", "bench_obs", "trace/metrics layer"),
         ("scaling", "bench_scaling", "beyond-paper scaling/overlap"),
     ]
 

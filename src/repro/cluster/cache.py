@@ -149,6 +149,7 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     insertions: int = 0
+    replacements: int = 0  # same-key re-puts (racing primary vs fallback)
     evictions: int = 0
     stored_bytes: int = 0  # current resident output bytes
     hit_bytes: int = 0  # output bytes served from cache
@@ -164,6 +165,7 @@ class CacheStats:
             "hits": self.hits,
             "misses": self.misses,
             "insertions": self.insertions,
+            "replacements": self.replacements,
             "evictions": self.evictions,
             "stored_bytes": self.stored_bytes,
             "hit_bytes": self.hit_bytes,
@@ -253,8 +255,14 @@ class SkimResultCache:
                 self.stats.evictions += 1
             self._entries[key] = _Entry(value, nbytes, fetch_bytes)
             self.stats.stored_bytes += nbytes
-            self.stats.insertions += 1
-            self.stats.miss_bytes += nbytes
+            if old is None:
+                self.stats.insertions += 1
+                self.stats.miss_bytes += nbytes
+            else:
+                # re-putting the same content address (a timed-out
+                # primary completing after its replica already won the
+                # race) used to double-count insertions and miss_bytes
+                self.stats.replacements += 1
             return True
 
     def clear(self) -> None:

@@ -48,6 +48,8 @@ from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
 from repro.core.zonemap import PRUNE, classify_span
 from repro.data.store import EventStore, FetchStats
+from repro.obs.schema import SkimReport, make_extras
+from repro.obs.trace import NULL_TRACER, Tracer
 
 CONCURRENCY_MODES = ("serial", "threads")
 
@@ -287,6 +289,7 @@ class ClusterCoordinator:
             straggle_s=0.0,
             wall_s=0.0,
             cached=True,
+            trace=None,  # a replay has no execution of its own to trace
         )
 
     def _pruned_response(self, node: StorageNode, query: Query) -> NodeResponse | None:
@@ -329,6 +332,16 @@ class ClusterCoordinator:
         out = EventStore.from_arrays(
             cols, jagged={}, basket_events=st.basket_events, codec=st.codec
         )
+        report = SkimReport(
+            mode="near_data",
+            fused=False,
+            pipelined=False,
+            prune=True,
+            output_bytes=out.compressed_bytes(),
+            window_rows=[(a, b, 0) for a, b in spans],
+            pruned_windows=[(a, b, PRUNE) for a, b in spans],
+            shard_pruned=True,
+        )
         result = SkimResult(
             mode="near_data",
             output=out,
@@ -338,15 +351,8 @@ class ClusterCoordinator:
             stats=stats,
             plan=plan,
             busy_fraction=0.0,
-            extras={
-                "output_bytes": out.compressed_bytes(),
-                "window_rows": [(a, b, 0) for a, b in spans],
-                "pruned_windows": [(a, b, PRUNE) for a, b in spans],
-                "prune": True,
-                "shard_pruned": True,
-                "fused": False,
-                "pipelined": False,
-            },
+            extras=report.legacy_extras(),
+            report=report,
         )
         return NodeResponse(
             node_id=node.node_id,
@@ -359,12 +365,23 @@ class ClusterCoordinator:
             pruned=True,
         )
 
+    @staticmethod
+    def _node_tracer(tracer, node: StorageNode):
+        """A fresh node-local tracer per execution attempt (same clock as
+        the coordinator's) — its spans ride back on the response for
+        :meth:`Tracer.adopt`.  ``None`` when tracing is off keeps the
+        node on the NULL_TRACER fast path."""
+        if tracer is None or not tracer.enabled:
+            return None
+        return Tracer(clock=tracer.clock, name=f"node-{node.node_id}")
+
     def _serve_shard(
         self,
         node: StorageNode,
         query: Query,
         qh: str,
         retries: list[tuple[int, int, int]],
+        tracer=None,
     ) -> NodeResponse:
         """Prune consult -> cache consult -> primary -> replica retry."""
         if self.prune:
@@ -376,8 +393,15 @@ class ClusterCoordinator:
             hit = self.cache.get(key)
             if hit is not None:
                 return self._hit_response(hit, node)
+        ntr = self._node_tracer(tracer, node)
         try:
-            resp = node.execute(query)
+            # pass the kwarg only when tracing — fault-injection tests
+            # stub ``execute`` with plain callables
+            resp = (
+                node.execute(query, tracer=ntr)
+                if ntr is not None
+                else node.execute(query)
+            )
         except NodeFailure:
             replica = self.replicas.get(node.shard.shard_id)
             if replica is None:
@@ -385,8 +409,13 @@ class ClusterCoordinator:
                     f"shard {node.shard.shard_id}: primary node "
                     f"{node.node_id} failed and no replica is configured"
                 ) from None
+            rtr = self._node_tracer(tracer, replica)
             try:
-                resp = replica.execute(query)
+                resp = (
+                    replica.execute(query, tracer=rtr)
+                    if rtr is not None
+                    else replica.execute(query)
+                )
             except NodeFailure as exc:
                 raise ClusterError(
                     f"shard {node.shard.shard_id}: primary and replica "
@@ -396,9 +425,11 @@ class ClusterCoordinator:
                 (node.shard.shard_id, node.node_id, replica.node_id)
             )
         if self.cache is not None:
+            # strip the span list: a future replay of this entry must not
+            # re-adopt this execution's spans into an unrelated tree
             self.cache.put(
                 key,
-                resp,
+                replace(resp, trace=None),
                 nbytes=resp.result.extras.get(
                     "output_bytes", resp.result.output.compressed_bytes()
                 ),
@@ -412,6 +443,7 @@ class ClusterCoordinator:
         query: Query,
         qh: str,
         retries: list[tuple[int, int, int]],
+        tracer=None,
     ) -> NodeResponse:
         """A primary blew the shard deadline: retry on the replica, or
         raise :class:`NodeTimeout`.  The replica runs on the gather
@@ -424,8 +456,13 @@ class ClusterCoordinator:
                 f"exceeded the {self.shard_timeout_s}s shard deadline "
                 "and no replica is configured"
             )
+        rtr = self._node_tracer(tracer, replica)
         try:
-            resp = replica.execute(query)
+            resp = (
+                replica.execute(query, tracer=rtr)
+                if rtr is not None
+                else replica.execute(query)
+            )
         except NodeFailure as exc:
             raise NodeTimeout(
                 f"shard {node.shard.shard_id}: node {node.node_id} "
@@ -436,7 +473,7 @@ class ClusterCoordinator:
         if self.cache is not None:
             self.cache.put(
                 versioned_key(qh, node.shard.manifest_hash),
-                resp,
+                replace(resp, trace=None),
                 nbytes=resp.result.extras.get(
                     "output_bytes", resp.result.output.compressed_bytes()
                 ),
@@ -444,7 +481,7 @@ class ClusterCoordinator:
             )
         return resp
 
-    def _gather_threads(self, query: Query, qh: str, retries):
+    def _gather_threads(self, query: Query, qh: str, retries, tracer=None):
         """Scatter to the pool, yield responses in shard order as they
         resolve, each bounded by ``shard_timeout_s``.  With a deadline
         configured the pool is NOT joined on exit — a hung worker must
@@ -452,55 +489,99 @@ class ClusterCoordinator:
         ex = ThreadPoolExecutor(max_workers=len(self.nodes))
         try:
             futs = [
-                ex.submit(self._serve_shard, node, query, qh, retries)
+                ex.submit(
+                    self._serve_shard, node, query, qh, retries, tracer
+                )
                 for node in self.nodes
             ]
             for node, fut in zip(self.nodes, futs):
                 try:
                     yield fut.result(timeout=self.shard_timeout_s)
                 except FutureTimeout:
-                    yield self._timeout_fallback(node, query, qh, retries)
+                    yield self._timeout_fallback(
+                        node, query, qh, retries, tracer
+                    )
         finally:
             ex.shutdown(
                 wait=self.shard_timeout_s is None, cancel_futures=True
             )
 
-    def run(self, query: Query | dict | str) -> ClusterSkimResult:
-        return drain(self.iter_run(query))
+    def run(self, query: Query | dict | str, tracer=None) -> ClusterSkimResult:
+        return drain(self.iter_run(query, tracer=tracer))
 
-    def iter_run(self, query: Query | dict | str):
+    def iter_run(self, query: Query | dict | str, tracer=None):
         """Streaming form of :meth:`run`: a generator yielding each
         shard's :class:`NodeResponse` (with its per-window survivor
         ledger) as the gather progresses, in shard order, and returning
         the merged :class:`ClusterSkimResult` as the generator's value
         (``drain()`` recovers it).  Closing the generator between
         shards abandons the remaining gather — the service layer's
-        cancellation point."""
+        cancellation point.
+
+        ``tracer`` records the cluster span tree: a ``cluster_query``
+        root, the one-shot plan/compile, and — under the ``merge``
+        umbrella — one ``shard`` span per response with the node's own
+        spans adopted beneath it (exactly once; cached and pruned
+        responses have none)."""
+        tr = tracer if tracer is not None else NULL_TRACER
         t0 = time.perf_counter()
+        qsid = tr.begin(
+            "cluster_query",
+            kind="query",
+            n_nodes=len(self.nodes),
+            concurrency=self.concurrency,
+        )
+        plan_t0 = tr.now()
         q, qh = self._compile_once(query)
+        tr.add_span(
+            "plan", kind="plan", t0=plan_t0, t1=tr.now(),
+            parent=qsid, query_hash=qh,
+        )
         retries: list[tuple[int, int, int]] = []
 
         if self.concurrency == "threads":
-            gather = self._gather_threads(q, qh, retries)
+            gather = self._gather_threads(q, qh, retries, tracer=tracer)
         else:
             gather = (
-                self._serve_shard(node, q, qh, retries)
+                self._serve_shard(node, q, qh, retries, tracer=tracer)
                 for node in self.nodes
             )
+        # the merge span is the umbrella for the whole gather: every
+        # shard span (and the node spans adopted under it) re-parents
+        # here, so the export shows scatter + reassembly as one phase
+        msid = tr.begin("merge", kind="merge")
         responses: list[NodeResponse] = []
         for resp in gather:
+            ssid = tr.begin(
+                f"shard[{resp.shard_id}]",
+                kind="shard",
+                shard=resp.shard_id,
+                node=resp.node_id,
+                cached=resp.cached,
+                pruned=resp.pruned,
+            )
+            if resp.trace:
+                tr.adopt(resp.trace, parent=ssid)
+            tr.end(ssid, n_passed=resp.result.n_passed)
             responses.append(resp)
-            yield resp
+            try:
+                yield resp
+            except GeneratorExit:
+                tr.end(msid, cancelled=True)
+                tr.end(qsid, cancelled=True)
+                raise
 
         t_merge = time.perf_counter()
         output, n_input, n_passed = merge_responses(
             responses, self.basket_events, self.codec
         )
         merge_s = time.perf_counter() - t_merge
+        tr.end(msid, merge_s=merge_s)
 
         breakdown = Breakdown.merged([r.result.breakdown for r in responses])
         stats = FetchStats.merged([r.result.stats for r in responses])
         slowest = max((r.modeled_s for r in responses), default=0.0)
+        tr.end(qsid, n_passed=n_passed, bytes=stats.bytes_fetched)
         return ClusterSkimResult(
             output=output,
             n_input=n_input,
@@ -512,16 +593,14 @@ class ClusterCoordinator:
             modeled_total_s=slowest + merge_s,
             merge_s=merge_s,
             wall_s=time.perf_counter() - t0,
-            extras={
-                "output_bytes": output.compressed_bytes(),
-                "n_nodes": len(self.nodes),
-                "concurrency": self.concurrency,
-                "query_hash": qh,
-                "pruned_shards": [
-                    r.shard_id for r in responses if r.pruned
-                ],
-                "prune_saved_bytes": stats.bytes_skipped,
-            },
+            extras=make_extras(
+                output_bytes=output.compressed_bytes(),
+                n_nodes=len(self.nodes),
+                concurrency=self.concurrency,
+                query_hash=qh,
+                pruned_shards=[r.shard_id for r in responses if r.pruned],
+                prune_saved_bytes=stats.bytes_skipped,
+            ),
         )
 
     # -- tenant batches (shared scan per node) --------------------------------
@@ -633,11 +712,11 @@ class ClusterCoordinator:
                     + merge_s,
                     merge_s=merge_s,
                     wall_s=0.0,
-                    extras={
-                        "output_bytes": output.compressed_bytes(),
-                        "tenant": ti,
-                        "query_hash": compiled[ti][1],
-                    },
+                    extras=make_extras(
+                        output_bytes=output.compressed_bytes(),
+                        tenant=ti,
+                        query_hash=compiled[ti][1],
+                    ),
                 )
             )
 

@@ -54,6 +54,10 @@ class NodeResponse:
     cached: bool = False  # filled by the coordinator on cache hits
     pruned: bool = False  # synthesized by the coordinator from zone-map
     # stats — the node was never contacted (DESIGN.md §9)
+    # node-local span list (repro.obs.trace.Span); the coordinator adopts
+    # these into its own tree, and they are stripped before cache.put —
+    # a replayed response must not re-adopt a stale execution's spans
+    trace: list | None = None
 
 
 @dataclass
@@ -146,11 +150,15 @@ class StorageNode:
 
     # -- request API ---------------------------------------------------------
 
-    def execute(self, query: Query | dict | str) -> NodeResponse:
-        """Run one skim over this node's shard (near-data mode)."""
+    def execute(self, query: Query | dict | str, tracer=None) -> NodeResponse:
+        """Run one skim over this node's shard (near-data mode).
+
+        ``tracer`` is a node-local :class:`~repro.obs.trace.Tracer`; its
+        recorded spans travel back on ``NodeResponse.trace`` for the
+        coordinator to adopt into the query-level tree."""
         straggle = self._consume_fault()
         t0 = time.perf_counter()
-        result = self.engine.run(query, mode="near_data")
+        result = self.engine.run(query, mode="near_data", tracer=tracer)
         self.requests_served += 1
         return NodeResponse(
             node_id=self.node_id,
@@ -160,13 +168,16 @@ class StorageNode:
             modeled_s=modeled_node_seconds(result) + straggle,
             straggle_s=straggle,
             wall_s=time.perf_counter() - t0,
+            trace=tracer.spans() if tracer is not None else None,
         )
 
-    def execute_batch(self, queries: list[Query | dict | str]) -> BatchResponse:
+    def execute_batch(
+        self, queries: list[Query | dict | str], tracer=None
+    ) -> BatchResponse:
         """Run a tenant batch as ONE shared scan over this node's shard."""
         straggle = self._consume_fault()
         t0 = time.perf_counter()
-        batch = self.shared_engine.run_batch(queries)
+        batch = self.shared_engine.run_batch(queries, tracer=tracer)
         self.requests_served += 1
         wall = time.perf_counter() - t0
         responses = [

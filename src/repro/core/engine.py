@@ -51,6 +51,8 @@ from repro.data.store import (
     WindowPrefetcher,
     coalesced_requests,
 )
+from repro.obs.schema import SkimReport
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclass
@@ -134,6 +136,10 @@ class SkimResult:
     plan: SkimPlan
     busy_fraction: float = 1.0  # compute_time / total -> Fig. 5b proxy
     extras: dict = field(default_factory=dict)
+    # structured form of `extras` (repro.obs.schema.SkimReport); extras
+    # is rendered FROM it via the compatibility shim and stays the
+    # read-side contract for existing callers
+    report: object = None
 
     @property
     def selectivity(self) -> float:
@@ -198,6 +204,7 @@ def _decode_branches(
     stats: FetchStats,
     coalesce: bool,
     preloaded: dict[str, np.ndarray] | None = None,
+    tracer=None,
 ) -> dict[str, np.ndarray]:
     """Fetch+decode a branch set for an event range; returns columnar data.
 
@@ -205,12 +212,16 @@ def _decode_branches(
     the structure (the evaluator uses ``n<Coll>``).  ``preloaded`` supplies
     counts branches already decoded in an earlier stage.
     """
+    tr = tracer if tracer is not None else NULL_TRACER
     data: dict[str, np.ndarray] = dict(preloaded or {})
     # counts branches must decode before jagged values they describe
     order = sorted(names, key=lambda n: 0 if not store.branches[n].jagged else 1)
     # one coalesced read round for the whole branch set (TTreeCache model;
     # the store owns the request accounting — DESIGN.md §2b)
+    fsid = tr.begin("fetch", kind="fetch", branches=len(order))
     window = store.fetch_window(order, start, stop, stats=stats, coalesce=coalesce)
+    tr.end(fsid, bytes=stats.bytes_fetched)
+    dsid = tr.begin("decode", kind="decode")
     for name in order:
         blobs = window[name]
         parts = []
@@ -242,6 +253,7 @@ def _decode_branches(
                 if parts
                 else np.empty(0, dtype=store.branches[name].np_dtype())
             )
+    tr.end(dsid)
     return data
 
 
@@ -294,6 +306,7 @@ def _window_phase2(
     breakdown: Breakdown,
     stats: FetchStats,
     coalesce: bool,
+    tracer=None,
 ) -> tuple[dict, dict]:
     """Phase 2 for one surviving window: fetch the output-only branches and
     select survivor columns (shared by the single-query executor and the
@@ -306,7 +319,8 @@ def _window_phase2(
     (DESIGN.md §9)."""
     need2 = [x for x in plan.output_branches if x not in loaded]
     data2 = _decode_branches(
-        store, need2, start, stop, breakdown, stats, coalesce, preloaded=loaded
+        store, need2, start, stop, breakdown, stats, coalesce, preloaded=loaded,
+        tracer=tracer,
     )
     full = {**loaded, **data2}
     with _Timer(breakdown, "deserialize"):
@@ -427,6 +441,7 @@ class SkimEngine:
         near_input_link: NetworkModel = PCIE_128G,
         prune: bool = True,
         cascade: bool = True,
+        tracer=None,
     ):
         self.store = store
         self.input_link = input_link
@@ -451,6 +466,9 @@ class SkimEngine:
         # ``False`` restores the PR-4 full-preload path (the accounting
         # reference), bit-identical on survivors either way.
         self.cascade = cascade
+        # default span sink (repro.obs.trace); the no-op tracer unless a
+        # caller opts in — per-call ``tracer=`` overrides take precedence
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     # -- public API ----------------------------------------------------------
 
@@ -462,8 +480,11 @@ class SkimEngine:
         pipeline: bool | str | None = None,
         prune: bool | None = None,
         cascade: bool | None = None,
+        tracer=None,
     ) -> SkimResult:
-        plan, args = self._prepare(query, mode, fused, pipeline, prune, cascade)
+        plan, args = self._prepare(
+            query, mode, fused, pipeline, prune, cascade, tracer
+        )
         if args is None:  # client_plain: the one-pass legacy path
             return self._run_client_plain(plan)
         return drain(self._iter_two_phase(plan, **args))
@@ -476,6 +497,7 @@ class SkimEngine:
         pipeline: bool | str | None = None,
         prune: bool | None = None,
         cascade: bool | None = None,
+        tracer=None,
     ):
         """Streaming form of :meth:`run`: a generator yielding one
         :class:`WindowPartial` per basket window as its ledger entry
@@ -489,7 +511,9 @@ class SkimEngine:
         construction — ``run`` is ``drain(iter_run(...))``.
         ``client_plain`` has no window loop and cannot stream.
         """
-        plan, args = self._prepare(query, mode, fused, pipeline, prune, cascade)
+        plan, args = self._prepare(
+            query, mode, fused, pipeline, prune, cascade, tracer
+        )
         if args is None:
             raise ValueError("client_plain is a one-pass mode; nothing to stream")
         return self._iter_two_phase(plan, **args)
@@ -502,11 +526,13 @@ class SkimEngine:
         pipeline: bool | str | None,
         prune: bool | None,
         cascade: bool | None,
+        tracer=None,
     ) -> tuple[SkimPlan, dict | None]:
         """Shared argument resolution + planning for run / iter_run.
 
         Returns ``(plan, two_phase_kwargs)``; ``None`` kwargs means
         client_plain (the legacy one-pass path)."""
+        tr = tracer if tracer is not None else self.tracer
         if not isinstance(query, Query):
             query = parse_query(query)
         do_prune = (self.prune if prune is None else bool(prune)) and (
@@ -519,16 +545,24 @@ class SkimEngine:
         if cascade is None:
             cascade = query.cascade if query.cascade is not None else self.cascade
         do_cascade = bool(cascade) and mode == "near_data" and use_fused
+        plan_t0 = tr.now()
         plan = plan_skim(
             query, self.store, window_events=self.chunk_events, prune=do_prune,
             cascade=do_cascade,
         )
+        plan_t = (plan_t0, tr.now())
         if mode == "client_plain":
             return plan, None
         if mode == "client_opt":
-            return plan, dict(mode=mode, link=self.input_link, coalesce=True)
+            return plan, dict(
+                mode=mode, link=self.input_link, coalesce=True,
+                tracer=tr, plan_t=plan_t,
+            )
         if mode == "server_side":
-            return plan, dict(mode=mode, link=LOCAL_DISK, coalesce=False)
+            return plan, dict(
+                mode=mode, link=LOCAL_DISK, coalesce=False,
+                tracer=tr, plan_t=plan_t,
+            )
         if mode == "near_data":
             prefetch = self.pipeline if pipeline is None else pipeline
             if prefetch not in (False, True, "threads"):
@@ -538,6 +572,7 @@ class SkimEngine:
             return plan, dict(
                 mode=mode, link=self.near_input_link, coalesce=True,
                 fused=use_fused, prefetch=prefetch,
+                tracer=tr, plan_t=plan_t,
             )
         raise ValueError(f"unknown mode {mode}")
 
@@ -581,12 +616,24 @@ class SkimEngine:
         coalesce: bool,
         fused: bool = False,
         prefetch: bool | str = False,
+        tracer=None,
+        plan_t: tuple | None = None,
     ):
         """Generator core of the two-phase executor: yields a
         :class:`WindowPartial` per window, returns the :class:`SkimResult`."""
+        tracer = tracer if tracer is not None else NULL_TRACER
         store, b, stats = self.store, Breakdown(), FetchStats()
         n = store.n_events
         chunk = self.chunk_events
+
+        # the query root span stays open across the whole generator; each
+        # child span closes before the window's partial yields, so a
+        # consumer observing the stream never sees a half-open child
+        qsid = tracer.begin(
+            "query", kind="query", mode=mode, n_events=n, fused=fused
+        )
+        if plan_t is not None:
+            tracer.add_span("plan", kind="plan", t0=plan_t[0], t1=plan_t[1])
 
         out_cols: dict[str, list] = {k: [] for k in plan.output_branches}
         jagged_map: dict[str, str] = {}
@@ -610,7 +657,9 @@ class SkimEngine:
         if fused and plan.cascade is not None:
             from repro.core.plan import CascadeExecutor, mark_fetched
 
-            cascade_exec = CascadeExecutor(plan, store, coalesce=coalesce)
+            cascade_exec = CascadeExecutor(
+                plan, store, coalesce=coalesce, tracer=tracer
+            )
         use_threads = prefetch == "threads"
         preload = fused or bool(prefetch)
         # zone-map decisions (DESIGN.md §9): one per chunk window, or None
@@ -647,7 +696,15 @@ class SkimEngine:
             else:
                 names = plan.filter_branches
             lb, ls = Breakdown(), FetchStats()
-            data = _decode_branches(store, names, start, stop, lb, ls, coalesce)
+            # the prefetch worker thread must not touch the consumer's
+            # span stack; its loads go untraced in "threads" mode (the
+            # serial schedules trace them as load_window spans)
+            ltr = NULL_TRACER if use_threads else tracer
+            lsid = ltr.begin("load_window", kind="fetch", window=start // chunk)
+            data = _decode_branches(
+                store, names, start, stop, lb, ls, coalesce, tracer=ltr
+            )
+            ltr.end(lsid, bytes=ls.bytes_fetched)
             return data, lb, ls
 
         def windows():
@@ -684,6 +741,9 @@ class SkimEngine:
             m = stop - start
             dec = decisions[wi] if decisions is not None else None
             kind = dec.decision if dec is not None else SCAN
+            wsid = tracer.begin(
+                f"window[{wi}]", kind="window", index=wi, decision=kind
+            )
             dev_cols: dict[str, np.ndarray] = {}
             # window-local processing breakdown/stats (merged into the
             # run totals below; also feeds the pipeline schedule model)
@@ -743,6 +803,7 @@ class SkimEngine:
                     mask = program_eval_np(loaded or {}, program, m)
                 else:
                     pad_K = max(pad_K, window_pad_K(loaded, program, store))
+                    ksid = tracer.begin("kernel", kind="kernel", window=wi)
                     with _Timer(wb, "filter"):
                         mask, dev_cols = fused_window_skim(
                             loaded, program, store,
@@ -750,6 +811,7 @@ class SkimEngine:
                             K=pad_K,
                             pad_to=chunk,
                         )
+                    tracer.end(ksid)
             else:
                 # ---- phase 1: staged filter over filter-criteria branches ----
                 mask = np.ones(m, dtype=bool)
@@ -784,6 +846,7 @@ class SkimEngine:
             part_jagged: dict = {}
             if k:
                 n_passed += k
+                p2sid = tracer.begin("phase2", kind="fetch", window=wi)
                 if outcome is not None:
                     # ---- phase 2 (cascaded window): the basket ledger
                     # dedups against phase 1, so filter∩output branches a
@@ -802,8 +865,9 @@ class SkimEngine:
                     # ---- phase 2: output-only branches, survivors only ----
                     cols, jagged = _window_phase2(
                         store, plan, start, stop, mask, dev_cols, loaded, wb,
-                        w2s, coalesce,
+                        w2s, coalesce, tracer=tracer,
                     )
+                tracer.end(p2sid, bytes=w2s.bytes_fetched)
                 jagged_map.update(jagged)
                 for k2, v in cols.items():
                     out_cols[k2].append(v)
@@ -834,18 +898,27 @@ class SkimEngine:
             # the window's ledger entry is complete: stream it.  A caller
             # that stops consuming here (cancellation) has paid exactly
             # the windows it saw — the accounting above is window-local.
-            yield WindowPartial(
-                index=wi, start=start, stop=stop, n_passed=k,
-                cols=part_cols, jagged=part_jagged, decision=kind,
-            )
+            tracer.end(wsid, n_passed=k)
+            try:
+                yield WindowPartial(
+                    index=wi, start=start, stop=stop, n_passed=k,
+                    cols=part_cols, jagged=part_jagged, decision=kind,
+                )
+            except GeneratorExit:
+                # cancelled mid-stream: close the root so the partial
+                # trace still exports as a well-formed tree
+                tracer.end(qsid, cancelled=True, n_passed=n_passed)
+                raise
         phase_wall = time.perf_counter() - t_phase
 
         phase1_bytes = stats.bytes_fetched  # pre-merge: phase-1 only
         stats.merge(phase2_stats)
 
+        osid = tracer.begin("write", kind="write")
         with _Timer(b, "write"):
             cat = _concat_output(out_cols, n_passed, plan, store)
         out = _write_output(cat, jagged_map, store, b)
+        tracer.end(osid)
 
         b.fetch = link.transfer_time(stats.bytes_fetched, stats.requests)
         out_bytes = out.compressed_bytes()
@@ -862,45 +935,48 @@ class SkimEngine:
             + b.write
             + b.output_transfer
         )
-        extras = {
-            "output_bytes": out_bytes,
-            "overlap_total": overlap_total,
-            "fused": fused,
-            "pipelined": bool(prefetch),
-            "phase_wall_s": phase_wall,
-            "window_rows": window_rows,
-            # phase split of stats.bytes_fetched (accept-all windows fold
-            # their single output round into phase 1 when preloading)
-            "phase1_bytes": phase1_bytes,
-            "phase2_bytes": phase2_stats.bytes_fetched,
+        report = SkimReport(
+            mode=mode,
+            fused=fused,
+            pipelined=bool(prefetch),
+            prune=decisions is not None,
+            # cascaded phase-1 ledger (DESIGN.md §11)
+            cascade=cascade_exec is not None,
+            output_bytes=out_bytes,
+            window_rows=window_rows,
             # zone-map pruning ledger (DESIGN.md §9): every window the
             # analysis decided without fetching, plus the priced savings
             # mirrored in stats.bytes_skipped / requests_skipped
-            "pruned_windows": [
+            pruned_windows=[
                 (d.start, d.stop, d.decision)
                 for d in decisions or ()
                 if d.decision != SCAN
             ],
-            "prune": decisions is not None,
-            # cascaded phase-1 ledger (DESIGN.md §11)
-            "cascade": cascade_exec is not None,
-        }
+            overlap_total_s=overlap_total,
+            phase_wall_s=phase_wall,
+            # phase split of stats.bytes_fetched (accept-all windows fold
+            # their single output round into phase 1 when preloading)
+            phase1_bytes=phase1_bytes,
+            phase2_bytes=phase2_stats.bytes_fetched,
+        )
         if cascade_exec is not None:
-            extras["cascade_order"] = cascade_exec.order()
-            extras["cascade_stages"] = cascade_exec.state.report()
-            extras["cascade_bytes_skipped"] = stats.cascade_bytes_skipped
+            report.cascade_order = cascade_exec.order()
+            report.cascade_stages = cascade_exec.state.report()
+            report.cascade_bytes_skipped = stats.cascade_bytes_skipped
         if win_records:
             # exact double-buffered schedule from the per-window records
             # (what the threaded prefetcher realizes on capable hosts)
-            extras["pipeline_total"] = (
+            report.pipeline_total_s = (
                 _pipeline_schedule(win_records, link)
                 + b.write
                 + b.output_transfer
             )
+        tracer.end(qsid, n_passed=n_passed, bytes=stats.bytes_fetched)
         return SkimResult(
             mode, out, n, n_passed, b, stats, plan,
             busy_fraction=compute / max(b.total(), 1e-12),
-            extras=extras,
+            extras=report.legacy_extras(),
+            report=report,
         )
 
 

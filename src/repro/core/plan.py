@@ -82,6 +82,28 @@ class CascadeStage:
         return self.est_bytes / max(1.0 - self.est_selectivity, _MIN_KILL)
 
 
+# predicate-node class -> stage kind label.  The calibration loop keys
+# priced-vs-observed byte ratios by this (DESIGN.md §13): pricing errors
+# are systematic per node *kind* (trigger true-rates are exact, ΔR/mass
+# selectivities are guesses), not per individual stage.
+_NODE_KIND = {
+    "Cut": "cut",
+    "AnyOf": "trigger",
+    "ObjectSelection": "object",
+    "HTCut": "ht",
+    "MassWindow": "mass",
+    "DeltaRCut": "deltaR",
+    "ExprCut": "expr",
+}
+
+
+def stage_kind(stage: CascadeStage) -> str:
+    """Stable kind label for a cascade stage (its predicate-node class)."""
+    if not stage.nodes:
+        return "const"
+    return _NODE_KIND.get(type(stage.nodes[0]).__name__, "other")
+
+
 @dataclass
 class CascadePlan:
     """Ordered cascade IR for one (query, store) pair.
@@ -295,7 +317,9 @@ def build_cascade(query: Query, store) -> CascadePlan | None:
 # ---------------------------------------------------------------------------
 
 
-def estimate_plan_bytes(plan, store, window_events: int) -> dict:
+def estimate_plan_bytes(
+    plan, store, window_events: int, calibration: dict | None = None
+) -> dict:
     """Price a :class:`~repro.core.planner.SkimPlan`'s fetch bytes before
     executing it — the admission-control currency (DESIGN.md §12).
 
@@ -312,10 +336,29 @@ def estimate_plan_bytes(plan, store, window_events: int) -> dict:
     scaled by the probability the window keeps a survivor.  Without a
     cascade the full filter set is priced per window (the preload path).
 
+    ``calibration`` is an optional ``{stage_kind: ratio}`` prior of
+    observed/priced byte ratios (from
+    :meth:`repro.obs.metrics.MetricsRegistry.calibration_priors` — the
+    admission feedback loop): each stage's priced bytes scale by its
+    kind's ratio, phase 2 by the ``"phase2"`` ratio.  Ratios clamp to
+    [0.05, 20] so a few anomalous jobs cannot collapse or explode the
+    price; ``None`` (the default) prices exactly as before.
+
     Returns ``{"phase1", "phase2", "total", "requests", "per_stage",
-    "est_selectivity", "n_windows", "n_windows_pruned"}`` — bytes as
-    ints, ``per_stage`` keyed by cascade stage index in static order.
+    "per_stage_kinds", "est_selectivity", "n_windows",
+    "n_windows_pruned"}`` — bytes as ints, ``per_stage`` keyed by
+    cascade stage index in static order, ``per_stage_kinds`` mapping
+    those indices to kind labels.
     """
+
+    def _scale(kind: str) -> float:
+        if not calibration:
+            return 1.0
+        ratio = calibration.get(kind)
+        if ratio is None:
+            return 1.0
+        return min(max(float(ratio), 0.05), 20.0)
+
     n = store.n_events
     spans = [
         (s, min(s + window_events, n)) for s in range(0, n, window_events)
@@ -324,6 +367,11 @@ def estimate_plan_bytes(plan, store, window_events: int) -> dict:
     cplan = plan.cascade
     per_stage: dict[int, float] = (
         {s.index: 0.0 for s in cplan.stages} if cplan is not None else {}
+    )
+    stage_kinds: dict[int, str] = (
+        {s.index: stage_kind(s) for s in cplan.stages}
+        if cplan is not None
+        else {}
     )
     phase1 = phase2 = 0.0
     requests = 0
@@ -337,7 +385,7 @@ def estimate_plan_bytes(plan, store, window_events: int) -> dict:
             continue
         if kind == ACCEPT_ALL:
             nbytes, nb = store.range_comp_bytes(plan.output_branches, a, b)
-            phase2 += nbytes
+            phase2 += nbytes * _scale("phase2")
             requests += coalesced_requests(nbytes, nb, True)
             passed_est += m
             continue
@@ -352,7 +400,7 @@ def estimate_plan_bytes(plan, store, window_events: int) -> dict:
                 stage = cplan.stages[si]
                 nbytes, _ = store.range_comp_bytes(stage.branches, a, b)
                 # truncate per window so per_stage sums exactly to phase1
-                est = int(nbytes * alive)
+                est = int(nbytes * alive * _scale(stage_kinds[si]))
                 per_stage[si] += est
                 phase1 += est
                 if est:
@@ -372,7 +420,7 @@ def estimate_plan_bytes(plan, store, window_events: int) -> dict:
         # phase 2 moves the output-only set iff >= 1 event survives
         p_alive = 1.0 - (1.0 - sel) ** max(m, 1)
         nbytes, _ = store.range_comp_bytes(plan.output_only_branches, a, b)
-        phase2 += nbytes * p_alive
+        phase2 += nbytes * p_alive * _scale("phase2")
         if nbytes and p_alive > 0.5:
             requests += coalesced_requests(nbytes, 0, True)
     return {
@@ -381,6 +429,7 @@ def estimate_plan_bytes(plan, store, window_events: int) -> dict:
         "total": int(phase1 + phase2),
         "requests": int(requests),
         "per_stage": {si: int(v) for si, v in per_stage.items()},
+        "per_stage_kinds": stage_kinds,
         "est_selectivity": passed_est / max(n, 1),
         "n_windows": len(spans),
         "n_windows_pruned": pruned,
@@ -458,6 +507,7 @@ class CascadeState:
                 {
                     "stage": i,
                     "tier": s.tier,
+                    "kind": stage_kind(s),
                     "branches": list(s.branches),
                     "est_selectivity": s.est_selectivity,
                     "observed_selectivity": self.observed_selectivity(i),
@@ -583,13 +633,17 @@ class CascadeExecutor:
         coalesce: bool = True,
         adaptive: bool = True,
         order: list[int] | None = None,
+        tracer=None,
     ):
         if plan.cascade is None:
             raise ValueError("plan has no cascade (plan_skim(cascade=True))")
+        from repro.obs.trace import NULL_TRACER
+
         self.plan = plan
         self.cplan: CascadePlan = plan.cascade
         self.store = store
         self.coalesce = coalesce
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._forced_order = list(order) if order is not None else None
         self.state = CascadeState(self.cplan, adaptive=adaptive and order is None)
         self._backend: str | None = None  # resolved on first evaluation
@@ -678,6 +732,10 @@ class CascadeExecutor:
                     self.state.skip(rest)
                 break
             stages_run += 1
+            ssid = self.tracer.begin(
+                f"stage[{si}]", kind="cascade_stage", stage=si,
+                node=stage_kind(stage), tier=stage.tier,
+            )
             stage_bytes = 0
             if pos == 0 and head_data is not None:
                 spans = [(start, stop)]
@@ -692,7 +750,7 @@ class CascadeExecutor:
                     )
                     sdata = _decode_branches(
                         store, list(stage.branches), a, b, breakdown,
-                        FetchStats(), self.coalesce,
+                        FetchStats(), self.coalesce, tracer=self.tracer,
                     )
                     n_local, off = b - a, a - start
                 with _Timer(timer_breakdown, "filter"):
@@ -702,7 +760,11 @@ class CascadeExecutor:
                     # full-window decode: reusable by phase 2 as-is
                     full_loaded.update(sdata)
             stage_bytes_total += stage_bytes
-            self.state.observe(si, alive_in, int(mask.sum()), stage_bytes)
+            alive_out = int(mask.sum())
+            self.tracer.end(
+                ssid, alive_in=alive_in, alive_out=alive_out, bytes=stage_bytes
+            )
+            self.state.observe(si, alive_in, alive_out, stage_bytes)
         return WindowOutcome(
             mask=mask,
             full_loaded=full_loaded,
@@ -736,7 +798,7 @@ class CascadeExecutor:
         )
         data = _decode_branches(
             self.store, need, start, stop, breakdown, FetchStats(),
-            self.coalesce, preloaded=dict(known),
+            self.coalesce, preloaded=dict(known), tracer=self.tracer,
         )
         return data
 
@@ -753,4 +815,5 @@ __all__ = [
     "estimate_node_selectivity",
     "estimate_plan_bytes",
     "mark_fetched",
+    "stage_kind",
 ]

@@ -257,6 +257,11 @@ class EventStore:
         self._decode_lock = threading.Lock()
         self.decode_cache_hits = 0
         self.decode_cache_misses = 0
+        # byte-weighted savings: decoded bytes NOT re-decoded thanks to
+        # a hit / decoded on a miss (same currency as the cluster result
+        # cache's saved_fetch_bytes — see repro.obs.metrics)
+        self.decode_cache_hit_bytes = 0
+        self.decode_cache_miss_bytes = 0
 
     # -- construction -------------------------------------------------------
 
@@ -567,12 +572,14 @@ class EventStore:
             if cached is not None:
                 self._decode_cache.move_to_end(key)
                 self.decode_cache_hits += 1
+                self.decode_cache_hit_bytes += cached.nbytes
                 return cached
             self.decode_cache_misses += 1
         vals = decode_basket(blob, self.codec, self.branches[name].np_dtype())
         if vals.flags.writeable:
             vals.flags.writeable = False
         with self._decode_lock:
+            self.decode_cache_miss_bytes += vals.nbytes
             self._decode_cache[key] = vals
             self._decode_cache.move_to_end(key)
             while len(self._decode_cache) > self.decode_cache_baskets:
@@ -581,10 +588,17 @@ class EventStore:
 
     def decode_cache_stats(self) -> dict:
         with self._decode_lock:
+            hits, misses = self.decode_cache_hits, self.decode_cache_misses
             return {
-                "hits": self.decode_cache_hits,
-                "misses": self.decode_cache_misses,
+                "hits": hits,
+                "misses": misses,
                 "resident": len(self._decode_cache),
+                "hit_bytes": self.decode_cache_hit_bytes,
+                "miss_bytes": self.decode_cache_miss_bytes,
+                # decoded bytes a hit avoided re-producing — the decode
+                # cache's byte-weighted savings currency
+                "saved_decode_bytes": self.decode_cache_hit_bytes,
+                "hit_rate": hits / max(hits + misses, 1),
             }
 
     # -- convenience full reads (not timed; for tests and writers) ----------

@@ -43,6 +43,8 @@ from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
 from repro.core.zonemap import ACCEPT_ALL, PRUNE, SCAN
 from repro.data.store import EventStore, FetchStats, WindowPrefetcher
+from repro.obs.schema import SkimReport
+from repro.obs.trace import NULL_TRACER
 
 # ---------------------------------------------------------------------------
 # shared-scan skim service
@@ -136,10 +138,12 @@ class SharedScanEngine:
             )
         self.pipeline = pipeline
 
-    def run_batch(self, queries: list[Query | dict | str]) -> SharedScanResult:
-        return drain(self.iter_batch(queries))
+    def run_batch(
+        self, queries: list[Query | dict | str], tracer=None
+    ) -> SharedScanResult:
+        return drain(self.iter_batch(queries, tracer=tracer))
 
-    def iter_batch(self, queries: list[Query | dict | str]):
+    def iter_batch(self, queries: list[Query | dict | str], tracer=None):
         """Streaming form of :meth:`run_batch`: a generator yielding one
         :class:`BatchWindowPartial` per basket window (every tenant's
         ledger entry for that window together, since the scan is shared)
@@ -153,7 +157,12 @@ class SharedScanEngine:
         store, chunk = self.store, self.chunk_events
         n = store.n_events
         t0 = time.perf_counter()
+        tr = tracer if tracer is not None else NULL_TRACER
 
+        bsid = tr.begin(
+            "batch", kind="query", n_tenants=len(queries), n_events=n
+        )
+        plan_t0 = tr.now()
         parsed = [q if isinstance(q, Query) else parse_query(q) for q in queries]
 
         def _wants_cascade(q: Query) -> bool:
@@ -169,9 +178,10 @@ class SharedScanEngine:
         ]
         programs = [p.compiled_program() if self.fused else None for p in plans]
         executors = [
-            CascadeExecutor(p, store) if p.cascade is not None else None
+            CascadeExecutor(p, store, tracer=tr) if p.cascade is not None else None
             for p in plans
         ]
+        tr.add_span("plan", kind="plan", t0=plan_t0, t1=tr.now())
 
         # full union of filter branches, first-seen order: the pricing /
         # amortization reference (what the PR-4 union preload moved)
@@ -222,9 +232,14 @@ class SharedScanEngine:
                 ls.skip(nbytes, _skipped_requests(nbytes, nb, coalesce=True))
                 return None, Breakdown(), ls
             lb, ls = Breakdown(), FetchStats()
+            # prefetch worker threads never touch the consumer span stack
+            ltr = NULL_TRACER if self.pipeline == "threads" else tr
+            lsid = ltr.begin("load_window", kind="fetch", window=start // chunk)
             data = _decode_branches(
-                store, load_union, start, stop, lb, ls, coalesce=True
+                store, load_union, start, stop, lb, ls, coalesce=True,
+                tracer=ltr,
             )
+            ltr.end(lsid, bytes=ls.bytes_fetched)
             return data, lb, ls
 
         # per-query accumulation state
@@ -244,6 +259,7 @@ class SharedScanEngine:
         for wi, (start, stop, (data, lb, ls)) in enumerate(src):
             shared_b.merge(lb)
             shared_stats.merge(ls)
+            wsid = tr.begin(f"window[{wi}]", kind="window", index=wi)
             m = stop - start
             # window-shared basket ledger (DESIGN.md §11): every
             # (branch, basket) pair moves at most once per window across
@@ -348,6 +364,7 @@ class SharedScanEngine:
                 if k == 0:
                     continue
                 n_passed[i] += k
+                p2sid = tr.begin("phase2", kind="fetch", tenant=i, window=wi)
                 if ex is not None and data is not None:
                     # phase 2 through the shared ledger: baskets any stage
                     # (or an earlier tenant) already moved are not re-paid
@@ -365,8 +382,9 @@ class SharedScanEngine:
                     cols, jagged = _window_phase2(
                         store, plan, start, stop, mask, dev_cols,
                         data if data is not None else {}, b,
-                        per_stats[i], coalesce=True,
+                        per_stats[i], coalesce=True, tracer=tr,
                     )
+                tr.end(p2sid, bytes=per_stats[i].bytes_fetched)
                 jagged_maps[i].update(jagged)
                 for k2, v in cols.items():
                     out_cols[i][k2].append(v)
@@ -384,9 +402,14 @@ class SharedScanEngine:
                 shared_stats.cascade_bytes_skipped += unfetched_bytes(
                     store, union, start, stop, ledger
                 )
-            yield BatchWindowPartial(
-                index=wi, start=start, stop=stop, tenants=tenant_parts
-            )
+            tr.end(wsid, n_passed=sum(p.n_passed for p in tenant_parts))
+            try:
+                yield BatchWindowPartial(
+                    index=wi, start=start, stop=stop, tenants=tenant_parts
+                )
+            except GeneratorExit:
+                tr.end(bsid, cancelled=True)
+                raise
 
         # phase-1 link time is paid once for the whole batch
         shared_b.fetch = self.input_link.transfer_time(
@@ -403,29 +426,32 @@ class SharedScanEngine:
             )
             out_bytes = out.compressed_bytes()
             b.output_transfer = self.output_link.transfer_time(out_bytes, 1)
-            extras = {
-                "output_bytes": out_bytes,
-                "fused": self.fused,
-                "pipelined": self.pipeline == "threads",
-                "shared_scan": True,
-                "window_rows": window_rows[i],
-                "pruned_windows": [
+            report = SkimReport(
+                mode="shared_scan",
+                fused=self.fused,
+                pipelined=self.pipeline == "threads",
+                prune=decisions[i] is not None,
+                cascade=executors[i] is not None,
+                output_bytes=out_bytes,
+                window_rows=window_rows[i],
+                pruned_windows=[
                     (d.start, d.stop, d.decision)
                     for d in decisions[i] or ()
                     if d.decision != SCAN
                 ],
-                "prune": decisions[i] is not None,
-                "cascade": executors[i] is not None,
-            }
+                shared_scan=True,
+            )
             if executors[i] is not None:
-                extras["cascade_order"] = executors[i].order()
-                extras["cascade_stages"] = executors[i].state.report()
+                report.cascade_order = executors[i].order()
+                report.cascade_stages = executors[i].state.report()
             results.append(
                 SkimResult(
                     "shared_scan", out, n, n_passed[i], b, per_stats[i], plan,
-                    extras=extras,
+                    extras=report.legacy_extras(),
+                    report=report,
                 )
             )
+        tr.end(bsid, n_passed=sum(n_passed))
 
         naive = sum(
             store.compressed_bytes(p.filter_branches) for p in plans

@@ -79,6 +79,9 @@ class CostEstimate:
     n_windows: int
     n_windows_pruned: int
     per_stage: dict = field(default_factory=dict)
+    # stage index -> stage kind ("cut"/"trigger"/"mass"/...), the join
+    # key for priced-vs-observed calibration (repro.obs.metrics)
+    per_stage_kinds: dict = field(default_factory=dict)
 
     def describe(self) -> str:
         return (
@@ -91,13 +94,22 @@ class CostEstimate:
         )
 
 
-def price_query(query, store, window_events: int | None = None, link=None) -> CostEstimate:
+def price_query(
+    query,
+    store,
+    window_events: int | None = None,
+    link=None,
+    calibration: dict | None = None,
+) -> CostEstimate:
     """Price one query against one store — metadata only, nothing fetched.
 
     Plans with pruning + cascading on (the service's execution
     configuration), prices the plan with
     :func:`repro.core.plan.estimate_plan_bytes`, and converts bytes to
     modeled seconds over ``link`` (default: the near-data PCIe tier).
+    ``calibration`` is an optional observed/priced ratio prior per stage
+    kind (:meth:`repro.obs.metrics.MetricsRegistry.calibration_priors`)
+    — the service's feedback loop from settled jobs back into pricing.
     Raises whatever :func:`plan_skim` raises on malformed queries
     (unknown branches etc.) — the service turns that into a rejection.
     """
@@ -109,7 +121,7 @@ def price_query(query, store, window_events: int | None = None, link=None) -> Co
     q = query if isinstance(query, Query) else parse_query(query)
     window_events = window_events or store.basket_events
     plan = plan_skim(q, store, window_events=window_events, prune=True, cascade=True)
-    est = estimate_plan_bytes(plan, store, window_events)
+    est = estimate_plan_bytes(plan, store, window_events, calibration=calibration)
     link = link or PCIE_128G
     return CostEstimate(
         est_bytes=est["total"],
@@ -121,6 +133,7 @@ def price_query(query, store, window_events: int | None = None, link=None) -> Co
         n_windows=est["n_windows"],
         n_windows_pruned=est["n_windows_pruned"],
         per_stage=est["per_stage"],
+        per_stage_kinds=est["per_stage_kinds"],
     )
 
 
@@ -180,6 +193,11 @@ class SkimJob:
     # weighted-fair virtual finish time + submission ordinal (FIFO tiebreak)
     vfinish: float = 0.0
     seq: int = 0
+    # per-job span tree (repro.obs.trace.Tracer) when the service runs
+    # with tracing on; root_span is the job[..] span every lifecycle
+    # span parents under
+    tracer: object = None
+    root_span: int = 0
 
     @property
     def terminal(self) -> bool:

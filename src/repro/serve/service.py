@@ -43,6 +43,13 @@ import itertools
 from dataclasses import dataclass
 
 from repro.core.engine import SkimEngine, WindowPartial
+from repro.obs.metrics import (
+    MetricsRegistry,
+    observed_phase2_bytes,
+    observed_stage_bytes,
+    priced_stage_bytes,
+)
+from repro.obs.trace import Tracer, chrome_trace, trace_json
 from repro.serve.engine import SharedScanEngine
 from repro.serve.jobs import (
     CANCELLED,
@@ -95,19 +102,20 @@ class EngineBackend:
         )
         self.mode = mode
 
-    def price(self, query) -> CostEstimate:
+    def price(self, query, calibration: dict | None = None) -> CostEstimate:
         return price_query(
             query,
             self.store,
             window_events=self.engine.chunk_events,
             link=self.engine.near_input_link,
+            calibration=calibration,
         )
 
-    def start(self, query):
-        return self.engine.iter_run(query, mode=self.mode)
+    def start(self, query, tracer=None):
+        return self.engine.iter_run(query, mode=self.mode, tracer=tracer)
 
-    def start_batch(self, queries):
-        return self.shared.iter_batch(queries)
+    def start_batch(self, queries, tracer=None):
+        return self.shared.iter_batch(queries, tracer=tracer)
 
 
 class ClusterBackend:
@@ -120,20 +128,23 @@ class ClusterBackend:
     def __init__(self, coordinator):
         self.coordinator = coordinator
 
-    def price(self, query) -> CostEstimate:
+    def price(self, query, calibration: dict | None = None) -> CostEstimate:
         parts = [
             price_query(
                 query,
                 node.shard.store,
                 window_events=node.shard.window_events,
                 link=node.near_input_link,
+                calibration=calibration,
             )
             for node in self.coordinator.nodes
         ]
         per_stage: dict[int, int] = {}
+        per_stage_kinds: dict[int, str] = {}
         for p in parts:
             for si, v in p.per_stage.items():
                 per_stage[si] = per_stage.get(si, 0) + v
+            per_stage_kinds.update(p.per_stage_kinds)
         n_events = sum(
             node.shard.store.n_events for node in self.coordinator.nodes
         )
@@ -154,28 +165,35 @@ class ClusterBackend:
             n_windows=sum(p.n_windows for p in parts),
             n_windows_pruned=sum(p.n_windows_pruned for p in parts),
             per_stage=per_stage,
+            per_stage_kinds=per_stage_kinds,
         )
 
-    def start(self, query):
-        return self._gen(query)
+    def start(self, query, tracer=None):
+        return self._gen(query, tracer)
 
-    def _gen(self, query):
-        it = self.coordinator.iter_run(query)
+    def _gen(self, query, tracer=None):
+        it = self.coordinator.iter_run(query, tracer=tracer)
         while True:
             try:
                 resp = next(it)
             except StopIteration as stop:
                 return stop.value
             rows = resp.result.extras.get("window_rows", [])
-            yield WindowPartial(
-                index=resp.shard_id,
-                start=rows[0][0] if rows else 0,
-                stop=rows[-1][1] if rows else 0,
-                n_passed=resp.result.n_passed,
-                cols={},
-                jagged={},
-                decision=f"shard:{resp.shard_id}",
-            )
+            try:
+                yield WindowPartial(
+                    index=resp.shard_id,
+                    start=rows[0][0] if rows else 0,
+                    stop=rows[-1][1] if rows else 0,
+                    n_passed=resp.result.n_passed,
+                    cols={},
+                    jagged={},
+                    decision=f"shard:{resp.shard_id}",
+                )
+            except GeneratorExit:
+                # close the coordinator promptly so its tracer's root
+                # span settles now, not at garbage collection
+                it.close()
+                raise
 
 
 # ---------------------------------------------------------------------------
@@ -254,6 +272,9 @@ class SkimService:
         clock: ManualClock | None = None,
         executor: DeterministicExecutor | None = None,
         batching: bool = False,
+        tracing: bool = False,
+        metrics: MetricsRegistry | None = None,
+        calibrate: bool = False,
     ):
         if not hasattr(backend, "start"):
             backend = EngineBackend(backend)
@@ -262,6 +283,15 @@ class SkimService:
         self.clock = clock or ManualClock()
         self.executor = executor or DeterministicExecutor()
         self.batching = batching and backend.supports_batch
+        # observability seams (DESIGN.md §13): ``tracing`` gives every
+        # job its own span tree (export with :meth:`export_trace`);
+        # ``metrics`` is the shared registry (a private one by default);
+        # ``calibrate`` feeds settled jobs' observed/priced ratios back
+        # into admission pricing as per-stage-kind priors
+        self.tracing = tracing
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.calibrate = calibrate
+        self._batch_tracers: list[Tracer] = []
         self.jobs: dict[int, SkimJob] = {}
         self._tenants: dict[str, _TenantState] = {}
         self._runs: dict[int, _Run] = {}  # job_id -> its run unit
@@ -308,10 +338,21 @@ class SkimService:
             submitted_at=self.clock.now(),
             seq=next(self._seq),
         )
+        if self.tracing:
+            job.tracer = Tracer(clock=self.clock, name=f"job-{job.job_id}")
+            job.root_span = job.tracer.begin(
+                f"job[{job.job_id}]", kind="job",
+                job_id=job.job_id, tenant=tenant,
+            )
         self.jobs[job.job_id] = job
         ts = self._tenant(tenant)
+        calib = self.metrics.calibration_priors() if self.calibrate else None
         try:
-            est = self.backend.price(query)
+            est = (
+                self.backend.price(query, calibration=calib)
+                if calib
+                else self.backend.price(query)
+            )
         except Exception as exc:  # malformed query: reject at the door
             return self._reject(job, f"unpriceable query: {exc}")
         job.estimate = est
@@ -340,12 +381,32 @@ class SkimService:
         vstart = max(self._vtime, ts.vlast)
         job.vfinish = vstart + cost / max(q.weight, 1e-9)
         ts.vlast = job.vfinish
+        if job.tracer is not None:
+            job.tracer.add_span(
+                "admission", kind="admission",
+                t0=job.submitted_at, t1=self.clock.now(),
+                parent=job.root_span,
+                admitted=True, est_bytes=est.est_bytes,
+            )
+        self.metrics.inc("service_jobs_submitted", tenant=tenant)
         return job
 
     def _reject(self, job: SkimJob, reason: str) -> SkimJob:
         job.state = REJECTED
         job.error = reason
         job.finished_at = self.clock.now()
+        if job.tracer is not None:
+            job.tracer.add_span(
+                "admission", kind="admission",
+                t0=job.submitted_at, t1=job.finished_at,
+                parent=job.root_span,
+                admitted=False, reason=reason,
+            )
+            job.tracer.end(job.root_span, state=REJECTED)
+        self.metrics.inc("service_jobs_submitted", tenant=job.tenant)
+        self.metrics.inc(
+            "service_jobs_total", state=REJECTED, tenant=job.tenant
+        )
         return job
 
     # -- cancellation --------------------------------------------------------
@@ -450,17 +511,41 @@ class SkimService:
             members = [job]
         try:
             if len(members) > 1:
-                gen = self.backend.start_batch([j.query for j in members])
+                # a coalesced batch executes under ONE shared tracer (the
+                # scan is genuinely shared work); per-job tracers keep
+                # their own admission/queue/settle lifecycle spans
+                btr = None
+                if self.tracing:
+                    btr = Tracer(
+                        clock=self.clock,
+                        name=f"batch-{len(self._batch_tracers)}",
+                    )
+                    self._batch_tracers.append(btr)
+                gen = self.backend.start_batch(
+                    [j.query for j in members], tracer=btr
+                )
                 run = _Run(gen=gen, jobs=members, batch=True)
             else:
                 members = [job]
-                gen = self.backend.start(job.query)
+                gen = (
+                    self.backend.start(job.query, tracer=job.tracer)
+                    if job.tracer is not None
+                    else self.backend.start(job.query)
+                )
                 run = _Run(gen=gen, jobs=members)
         except Exception as exc:
             job.error = f"{type(exc).__name__}: {exc}"
             self._settle(job, FAILED)
             return None
         for j in run.jobs:
+            if j.tracer is not None:
+                j.tracer.add_span(
+                    "queue_wait", kind="queue",
+                    t0=j.submitted_at, t1=now, parent=j.root_span,
+                )
+            self.metrics.observe(
+                "service_queue_wait_s", now - j.submitted_at
+            )
             j.state = RUNNING
             j.started_at = now
             self._runs[j.job_id] = run
@@ -501,6 +586,11 @@ class SkimService:
                 meta={"decision": wp.decision, "window": wp.index},
             )
         )
+        if len(job.partials) == 1:
+            self.metrics.observe(
+                "service_first_partial_s",
+                self.clock.now() - job.submitted_at,
+            )
 
     def _finish(self, run: _Run, value) -> None:
         if run.batch:
@@ -539,6 +629,54 @@ class SkimService:
         if state == DONE and job.result is not None:
             ts.spent_bytes += job.result.stats.bytes_fetched
             ts.spent_wall_s += _modeled_seconds(job.result)
+            self._record_calibration(job)
+        self.metrics.inc("service_jobs_total", state=state, tenant=job.tenant)
+        self.metrics.set_gauge(
+            "tenant_spent_bytes", ts.spent_bytes, tenant=job.tenant
+        )
+        self.metrics.set_gauge(
+            "tenant_reserved_bytes", ts.reserved_bytes, tenant=job.tenant
+        )
+        if job.tracer is not None:
+            observed = (
+                job.result.stats.bytes_fetched
+                if job.result is not None
+                else 0
+            )
+            job.tracer.add_span(
+                "settle", kind="settle",
+                t0=job.finished_at, t1=job.finished_at,
+                parent=job.root_span,
+                state=state,
+                observed_bytes=observed,
+                priced_bytes=(
+                    job.estimate.est_bytes
+                    if job.estimate is not None
+                    else None
+                ),
+            )
+            job.tracer.end(job.root_span, state=state)
+
+    def _record_calibration(self, job: SkimJob) -> None:
+        """Feed one DONE job's observed ledger back against its priced
+        estimate: total bytes, the phase-2 split when the result reports
+        one, and per-cascade-stage-kind bytes (the prior
+        :func:`~repro.core.plan.estimate_plan_bytes` consumes)."""
+        est = job.estimate
+        if est is None or job.result is None:
+            return
+        self.metrics.record_price_ratio(
+            "total", est.est_bytes, job.result.stats.bytes_fetched
+        )
+        p2 = observed_phase2_bytes(job.result)
+        if p2 is not None and est.est_phase2_bytes > 0:
+            self.metrics.record_price_ratio(
+                "phase2", est.est_phase2_bytes, p2
+            )
+        observed = observed_stage_bytes(job.result)
+        for kind, priced in priced_stage_bytes(est).items():
+            if kind in observed:
+                self.metrics.record_price_ratio(kind, priced, observed[kind])
 
     # -- introspection -------------------------------------------------------
 
@@ -546,6 +684,31 @@ class SkimService:
     def trace(self):
         """The executor's replayable decision log."""
         return self.executor.trace
+
+    def calibration_summary(self) -> dict:
+        """Priced-vs-observed byte totals (and ratio) per cascade-stage
+        kind, accumulated from every DONE job."""
+        return self.metrics.calibration_summary()
+
+    def export_trace(self, path: str | None = None) -> dict:
+        """Assemble every traced job (and coalesced batch) into ONE
+        Chrome-trace document — one ``pid`` per job, batch passes on
+        pids from 10000 — and optionally write its canonical JSON to
+        ``path``.  Requires ``tracing=True``; returns the document."""
+        groups = [
+            (job.job_id, f"job-{job.job_id} [{job.tenant}]", job.tracer)
+            for job in self.jobs.values()
+            if job.tracer is not None
+        ]
+        groups += [
+            (10_000 + i, btr.name, btr)
+            for i, btr in enumerate(self._batch_tracers)
+        ]
+        doc = chrome_trace(groups)
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(trace_json(doc))
+        return doc
 
     def queue_depth(self) -> int:
         return sum(

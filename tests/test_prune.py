@@ -433,6 +433,8 @@ def test_decode_cache_disabled_and_bounded():
     np.testing.assert_array_equal(a, b)
     assert st.decode_cache_stats() == {
         "hits": 0, "misses": 0, "resident": 0,
+        "hit_bytes": 0, "miss_bytes": 0, "saved_decode_bytes": 0,
+        "hit_rate": 0.0,
     }
     st.decode_cache_baskets = 2
     st.read_flat("MET_pt")  # 4 baskets through a 2-entry cache

@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Forbid bare ``extras["..."]`` writes outside the obs schema module.
+
+PR 7 moved result metadata behind the versioned report schema
+(``repro.obs.schema``): engines attach a ``SkimReport`` and render the
+compatibility ``extras`` dict through ``SkimReport.legacy_extras()`` /
+``make_extras()``.  This checker keeps it that way — any NEW direct
+``extras["key"] = ...`` (or ``+=`` / ``|=``) assignment in ``src/repro``
+fails the lint step, so the extras key set can only grow deliberately in
+one place (``KNOWN_EXTRAS``).
+
+Reads (``extras["key"]`` on the right-hand side, ``.get(...)``, ``in``)
+are fine everywhere; only writes are schema mutations.
+
+Usage::
+
+    python tools/check_extras.py            # scan src/repro
+    python tools/check_extras.py PATH...    # scan specific files/dirs
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+#: subscript-assignment to an extras dict: ``extras["k"] =``, ``+=``,
+#: ``|=`` — but not ``==`` comparisons
+_WRITE = re.compile(
+    r"""\bextras\s*\[\s*['"][^'"\]]*['"]\s*\]\s*(?:=(?!=)|\+=|\|=)"""
+)
+
+#: the one module allowed to define extras shapes
+_EXEMPT = ("obs/schema.py",)
+
+
+def scan(paths: list[str | Path]) -> list[tuple[str, int, str]]:
+    """Return ``(path, lineno, line)`` for every bare extras write."""
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    violations = []
+    for f in files:
+        if any(str(f).endswith(e) for e in _EXEMPT):
+            continue
+        for i, line in enumerate(f.read_text().splitlines(), 1):
+            code = line.split("#", 1)[0]
+            if _WRITE.search(code):
+                violations.append((str(f), i, line.strip()))
+    return violations
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["src/repro"]
+    violations = scan(paths)
+    for path, lineno, line in violations:
+        print(f"{path}:{lineno}: bare extras write: {line}")
+    if violations:
+        print(
+            f"\n{len(violations)} bare extras write(s) found — go through "
+            "repro.obs.schema (SkimReport / make_extras) instead.",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"check_extras: clean ({', '.join(map(str, paths))})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
