@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test bench smoke lint quickstart
+.PHONY: test bench smoke chaos lint quickstart
 
 test:  ## tier-1 suite
 	$(PY) -m pytest -x -q
@@ -12,9 +12,12 @@ test:  ## tier-1 suite
 bench:  ## full benchmark harness (CSV on stdout)
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
 
-smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + service + obs; the CI step).  Emits BENCH_<pr>.json + BENCH_<pr>_trace.json.
+smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + service + obs + faults; the CI step).  Emits BENCH_<pr>.json + BENCH_<pr>_trace.json.
 	PYTHONPATH=src:. $(PY) benchmarks/run.py --smoke --json \
-		--only pipeline,cluster,prune,expr,cascade,service,obs
+		--only pipeline,cluster,prune,expr,cascade,service,obs,faults
+
+chaos:  ## seeded fault-injection sweep (tests/test_chaos.py)
+	$(PY) -m pytest -q -m chaos tests/test_chaos.py
 
 lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
 	ruff check src tests benchmarks examples tools

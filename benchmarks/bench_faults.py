@@ -1,0 +1,143 @@
+"""Fault-tolerance costs: hedged stragglers + checksum overhead.
+
+Two claims from DESIGN.md §14, benchmarked:
+
+  * **Hedging cuts the modeled straggler makespan.**  A 4-node
+    replicated cluster with one injected straggler runs twice — without
+    hedging (makespan = the straggler) and with a quantile hedge
+    (makespan = hedge delay + the replica).  Both results are
+    bit-identical; the hedged makespan must be strictly smaller.
+  * **Integrity verification costs <=2% of a skim.**  Every basket
+    fetch recomputes a CRC-32 against the encode-time digest
+    (``EventStore.verify``).  A full near-data skim with verification
+    on vs off bounds the end-to-end overhead; CRC-32 on the compressed
+    blob is cheap next to decode + kernels + output encode.
+
+Reported rows: unhedged vs hedged modeled makespan (and the win
+ledger), retry-path modeled cost for a corrupt basket, and the measured
+verify overhead percentage.
+
+``--smoke`` shrinks the store for CI.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+from benchmarks.common import QUERY, csv_row
+from repro.cluster import HedgePolicy, build_cluster
+from repro.core.engine import LOCAL_DISK
+
+N_NODES = 4
+STRAGGLE_S = 30.0
+VERIFY_REPEATS = 5
+#: the DESIGN.md §14 budget: integrity verification <= 2% of decode
+VERIFY_BUDGET = 0.02
+
+
+def _straggler_cluster(store, hedge=None):
+    coord = build_cluster(
+        store, N_NODES, replication=True, near_input_link=LOCAL_DISK,
+        hedge=hedge,
+    )
+    coord.nodes[1].inject_fault("straggle", delay_s=STRAGGLE_S)
+    return coord
+
+
+def _skim_sweep(store) -> float:
+    """Seconds for one full near-data skim (min-of-N).
+
+    The decode cache is disabled for the measurement — a cache hit
+    skips the decode but not the fetch-time digest check, which would
+    inflate the apparent verify share far past what any cold read pays.
+    """
+    from repro.core.engine import run_skim
+
+    saved = store.decode_cache_baskets
+    store.decode_cache_baskets = 0
+    store._decode_cache.clear()
+    try:
+        best = float("inf")
+        for _ in range(VERIFY_REPEATS):
+            t0 = time.perf_counter()
+            run_skim(store, QUERY, mode="near_data")
+            best = min(best, time.perf_counter() - t0)
+        return best
+    finally:
+        store.decode_cache_baskets = saved
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        common.N_EVENTS = min(common.N_EVENTS, 20_000)
+    store = common.get_store("bitpack")
+
+    # -- hedged straggler makespan -------------------------------------
+    clean = build_cluster(
+        store, N_NODES, replication=False, near_input_link=LOCAL_DISK
+    ).run(QUERY)
+    base = max(r.modeled_s for r in clean.responses)
+
+    unhedged = _straggler_cluster(store).run(QUERY)
+    hedge = HedgePolicy(delay_s=base * 1.5)
+    hedged_res = _straggler_cluster(store, hedge=hedge).run(QUERY)
+
+    assert unhedged.n_passed == hedged_res.n_passed == clean.n_passed
+    assert hedged_res.extras["hedges_won"] >= 1
+    assert hedged_res.modeled_total_s < unhedged.modeled_total_s, (
+        "hedging must cut the modeled straggler makespan"
+    )
+    speedup = unhedged.modeled_total_s / hedged_res.modeled_total_s
+    csv_row(
+        "faults/straggler/unhedged", unhedged.modeled_total_s * 1e6,
+        f"one {STRAGGLE_S:.0f}s modeled straggler dominates",
+    )
+    csv_row(
+        "faults/straggler/hedged", hedged_res.modeled_total_s * 1e6,
+        f"hedge delay + replica; {speedup:.1f}x faster, "
+        f"won={hedged_res.extras['hedges_won']}",
+    )
+
+    # -- corrupt-basket retry path -------------------------------------
+    coord = build_cluster(
+        store, N_NODES, replication=True, near_input_link=LOCAL_DISK,
+        prune=False,
+    )
+    coord.nodes[1].inject_fault("corrupt")
+    res = coord.run(QUERY)
+    assert res.n_passed == clean.n_passed
+    assert res.extras["corrupt_baskets"] == 1
+    csv_row(
+        "faults/corrupt/retried", res.modeled_total_s * 1e6,
+        f"replica re-fetch, backoff={res.extras['retry_backoff_s']:.3f}s",
+    )
+
+    # -- checksum overhead ---------------------------------------------
+    store.verify = True
+    with_verify = _skim_sweep(store)
+    store.verify = False
+    without = _skim_sweep(store)
+    store.verify = True
+    overhead = with_verify / without - 1.0
+    csv_row(
+        "faults/verify/overhead_pct", overhead * 100.0,
+        f"CRC-32 per fetch vs unchecked skim (budget "
+        f"{VERIFY_BUDGET * 100:.0f}%)",
+    )
+    assert overhead <= VERIFY_BUDGET, (
+        f"integrity verification overhead {overhead * 100:.2f}% exceeds "
+        f"the {VERIFY_BUDGET * 100:.0f}% budget"
+    )
+
+    return {
+        "unhedged_s": unhedged.modeled_total_s,
+        "hedged_s": hedged_res.modeled_total_s,
+        "hedge_speedup": speedup,
+        "verify_overhead": overhead,
+    }
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(smoke=True)

@@ -20,6 +20,9 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              bench_obs (trace/metrics layer: no-op tracer overhead
              bound + deterministic Chrome-trace export of a traced
              service drain),
+             bench_faults (fault-tolerance costs: hedged straggler
+             makespan, corrupt-basket retry path, checksum overhead
+             vs the 2% budget),
              bench_scaling (multi-shard)
 
 Module selection (CI and the 2-core dev host pay for one figure, not the
@@ -43,7 +46,7 @@ import sys
 import time
 
 # the PR this tree's benchmark artifact belongs to (BENCH_<pr>.json)
-PR_NUMBER = 7
+PR_NUMBER = 8
 
 
 def _modules() -> list[tuple[str, str, str]]:
@@ -61,6 +64,7 @@ def _modules() -> list[tuple[str, str, str]]:
         ("cascade", "bench_cascade", "cascaded phase-1 execution"),
         ("service", "bench_service", "async skim job service"),
         ("obs", "bench_obs", "trace/metrics layer"),
+        ("faults", "bench_faults", "fault tolerance: hedging + checksums"),
         ("scaling", "bench_scaling", "beyond-paper scaling/overlap"),
     ]
 

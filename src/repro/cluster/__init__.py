@@ -20,9 +20,19 @@ from repro.cluster.coordinator import (
     ClusterCoordinator,
     ClusterError,
     ClusterSkimResult,
+    DegradedResult,
+    IntegrityError,
     NodeTimeout,
+    ShardError,
     build_cluster,
     merge_responses,
+)
+from repro.cluster.retry import (
+    DEFAULT_RETRY_POLICY,
+    HedgePolicy,
+    RetryEvent,
+    RetryPolicy,
+    classify_fault,
 )
 from repro.cluster.node import (
     BatchResponse,
@@ -39,10 +49,18 @@ __all__ = [
     "ClusterCoordinator",
     "ClusterError",
     "ClusterSkimResult",
+    "DEFAULT_RETRY_POLICY",
+    "DegradedResult",
+    "HedgePolicy",
+    "IntegrityError",
     "NodeFailure",
     "NodeResponse",
     "NodeTimeout",
+    "RetryEvent",
+    "RetryPolicy",
     "Shard",
+    "ShardError",
+    "classify_fault",
     "ShardMap",
     "SkimResultCache",
     "StorageNode",

@@ -16,8 +16,16 @@ the single-node executor produced them in.  Accounting merges with
 ``FetchStats.merged`` / ``Breakdown.merged`` — for aligned shards the
 cluster's fetched bytes and request counts equal the single-node run's.
 
-Failures: a node that raises :class:`NodeFailure` is retried on that
-shard's replica; stragglers only stretch the modeled makespan.  Repeat
+Failures (DESIGN.md §14): a shard that raises :class:`NodeFailure`,
+:class:`~repro.data.store.CorruptBasket`, or blows its deadline is
+re-issued under the per-query :class:`~repro.cluster.retry.RetryPolicy`
+(replica first, deterministic modeled backoff); stragglers stretch the
+modeled makespan unless a :class:`~repro.cluster.retry.HedgePolicy`
+hedges them onto the replica — the coordinator takes the faster
+*bit-identical* response (mismatch raises :class:`IntegrityError`,
+never a silent pick).  ``allow_partial=True`` turns shards that exhaust
+their budget into an explicit :class:`DegradedResult` whose error
+manifest accounts every missing window; the default refuses.  Repeat
 queries: the coordinator consults the content-addressed
 :class:`~repro.cluster.cache.SkimResultCache` per (query, shard) before
 scattering, so warm shards skip phase 1 (and everything else) entirely.
@@ -43,26 +51,59 @@ import numpy as np
 
 from repro.cluster.cache import SkimResultCache, query_hash, versioned_key
 from repro.cluster.node import BatchResponse, NodeFailure, NodeResponse, StorageNode
+from repro.cluster.retry import (
+    DEFAULT_RETRY_POLICY,
+    HedgePolicy,
+    RetryEvent,
+    RetryPolicy,
+    classify_fault,
+)
 from repro.core.engine import Breakdown, SkimResult, _skipped_requests, drain
 from repro.core.planner import plan_skim
 from repro.core.query import Query, parse_query
 from repro.core.zonemap import PRUNE, classify_span
-from repro.data.store import EventStore, FetchStats
+from repro.data.store import CorruptBasket, EventStore, FetchStats
 from repro.obs.schema import SkimReport, make_extras
 from repro.obs.trace import NULL_TRACER, Tracer
 
 CONCURRENCY_MODES = ("serial", "threads")
 
+#: exceptions the retry policy covers — one more attempt, not an abort
+RETRYABLE = (NodeFailure, CorruptBasket)
+
 
 class ClusterError(RuntimeError):
-    """A shard could not be served by its primary or any replica."""
+    """A shard could not be served within its retry budget."""
 
 
 class NodeTimeout(ClusterError):
-    """A shard blew its per-shard deadline (threads mode) and no replica
-    could cover for it.  Without a deadline a straggling node without a
+    """A shard blew its per-shard deadline and no retry target could
+    cover for it.  Without a deadline a straggling node without a
     replica hangs the whole gather forever — ``shard_timeout_s`` turns
-    that into this error (or a replica retry) instead."""
+    that into this error (or a replica retry) instead.  In threads mode
+    the deadline is wall-clock (``Future.result(timeout=...)``); in
+    serial mode it is enforced against the *modeled* clock
+    (``NodeResponse.modeled_s``), since a serial in-process gather
+    cannot be preempted by wall time.
+
+    Leak semantics (threads mode): the worker thread that timed out is
+    deliberately NOT joined — it still holds the hung node's request and
+    parks its eventual result (or exception) in an abandoned future.
+    The pool is shut down with ``wait=False``, gather threads are named
+    ``skim-gather-*`` so leaked workers are identifiable in thread
+    dumps, and a fresh pool per gather means a subsequent query on the
+    same coordinator is unaffected (pinned by tests/test_faults.py)."""
+
+
+class IntegrityError(RuntimeError):
+    """Two executions of the same shard disagreed bit-for-bit.
+
+    Raised when a hedged replica response does not match the primary's
+    (output manifest hash, survivor counts, or window ledger) — the one
+    fault the coordinator must never paper over, because picking either
+    side silently would be exactly the corruption this layer exists to
+    prevent.  Deliberately NOT a :class:`ClusterError`: ``allow_partial``
+    degrades budget-exhausted shards, never integrity violations."""
 
 
 @dataclass
@@ -93,6 +134,72 @@ class ClusterSkimResult:
     def pruned_shards(self) -> list[int]:
         """Shards answered from zone-map stats without any RPC."""
         return [r.shard_id for r in self.responses if r.pruned]
+
+    @property
+    def degraded(self) -> bool:
+        return False
+
+
+@dataclass(frozen=True)
+class ShardError:
+    """One shard's terminal failure inside a degraded gather: which
+    windows are missing and why (DESIGN.md §14)."""
+
+    shard_id: int
+    node_id: int
+    kind: str  # "fail" | "timeout" | "corrupt"
+    message: str
+    window_ids: list[int]
+    # global event spans of the missing windows, [start, stop)
+    spans: list[tuple[int, int]]
+
+    @property
+    def missing_events(self) -> int:
+        return sum(b - a for a, b in self.spans)
+
+
+@dataclass
+class DegradedResult(ClusterSkimResult):
+    """A partial cluster result: every surviving window bit-identical to
+    the reference, every missing window explicitly accounted.
+
+    Only produced under ``allow_partial=True`` after a shard exhausts
+    its retry budget; ``errors`` is the per-shard error manifest.  A
+    degraded result is **never cached** — the per-shard result cache
+    only ever stores complete shard responses, and the merged object
+    carries no cache entry of its own.
+    """
+
+    errors: list[ShardError] = field(default_factory=list)
+
+    @property
+    def degraded(self) -> bool:
+        return True
+
+    @property
+    def missing_windows(self) -> list[int]:
+        return sorted(w for e in self.errors for w in e.window_ids)
+
+
+@dataclass
+class _Gather:
+    """Per-gather fault ledger (one per ``iter_run`` invocation; list
+    appends are atomic under the GIL, so the threads gather shares it
+    without a lock)."""
+
+    retries: list[tuple[int, int, int]] = field(default_factory=list)
+    events: list[RetryEvent] = field(default_factory=list)
+    hedges: list[tuple[int, str]] = field(default_factory=list)  # (shard, outcome)
+    samples: list[float] = field(default_factory=list)  # modeled_s, hedge input
+    errors: list[ShardError] = field(default_factory=list)
+    corrupts: list[int] = field(default_factory=list)  # shard per CorruptBasket
+
+    @property
+    def backoff_s(self) -> float:
+        return sum(e.backoff_s for e in self.events)
+
+    def hedge_count(self, outcome: str) -> int:
+        return sum(1 for _, o in self.hedges if o == outcome)
 
 
 @dataclass
@@ -216,9 +323,15 @@ class ClusterCoordinator:
     """Scatter a query to N storage nodes, gather one merged result.
 
     ``replicas`` maps shard_id -> a standby :class:`StorageNode` holding
-    the same shard; a primary that raises :class:`NodeFailure` is retried
-    there exactly once.  ``cache`` (optional) is consulted per
-    (query, shard manifest) before any node executes.
+    the same shard; a primary that raises a retryable fault is re-issued
+    there under ``retry_policy`` (default: the historical one-replica
+    retry).  ``hedge`` (optional :class:`HedgePolicy`) re-issues shards
+    whose modeled time sits in the straggler tail.  ``cache`` (optional)
+    is consulted per (query, shard manifest) before any node executes.
+    ``metrics`` (optional :class:`~repro.obs.metrics.MetricsRegistry`)
+    counts retries, hedges, and quarantined baskets.
+    ``allow_partial`` sets the default degradation stance for
+    :meth:`run` / :meth:`iter_run` (refused unless enabled).
     """
 
     def __init__(
@@ -231,6 +344,10 @@ class ClusterCoordinator:
         codec: str | None = None,
         prune: bool = True,
         shard_timeout_s: float | None = None,
+        retry_policy: RetryPolicy = DEFAULT_RETRY_POLICY,
+        hedge: HedgePolicy | None = None,
+        metrics=None,
+        allow_partial: bool = False,
     ):
         if not nodes:
             raise ValueError("need at least one storage node")
@@ -249,11 +366,17 @@ class ClusterCoordinator:
         self.prune = prune
         if shard_timeout_s is not None and shard_timeout_s <= 0:
             raise ValueError("shard_timeout_s must be positive (or None)")
-        # per-shard deadline for the threads gather; None = wait forever
+        # per-shard deadline: wall-clock in threads mode, modeled in
+        # serial mode; None = wait forever
         self.shard_timeout_s = shard_timeout_s
+        self.retry_policy = retry_policy
+        self.hedge = hedge
+        self.metrics = metrics
+        self.allow_partial = allow_partial
         ref = nodes[0].shard.store
         self.basket_events = basket_events or ref.basket_events
         self.codec = codec or ref.codec
+        self.total_events = sum(n.shard.n_events for n in self.nodes)
 
     # -- single query ---------------------------------------------------------
 
@@ -375,15 +498,111 @@ class ClusterCoordinator:
             return None
         return Tracer(clock=tracer.clock, name=f"node-{node.node_id}")
 
+    def _execute_node(self, node: StorageNode, query: Query, tracer=None):
+        """One execution attempt on one node.  The tracer kwarg is passed
+        only when tracing — fault-injection tests stub ``execute`` with
+        plain callables."""
+        ntr = self._node_tracer(tracer, node)
+        return (
+            node.execute(query, tracer=ntr)
+            if ntr is not None
+            else node.execute(query)
+        )
+
+    def _inc(self, name: str, **labels) -> None:
+        if self.metrics is not None:
+            self.metrics.inc(name, **labels)
+
+    @staticmethod
+    def _responses_identical(a: NodeResponse, b: NodeResponse) -> bool:
+        """Bit-identity of two executions of the same shard: survivor
+        counts, the per-window ledger, and the content address of the
+        output baskets (manifest hash covers every blob digest)."""
+        ra, rb = a.result, b.result
+        return (
+            ra.n_passed == rb.n_passed
+            and ra.n_input == rb.n_input
+            and list(ra.extras.get("window_rows", []))
+            == list(rb.extras.get("window_rows", []))
+            and ra.output.manifest_hash() == rb.output.manifest_hash()
+        )
+
+    def _terminal_error(
+        self, node: StorageNode, kind: str, attempts: int
+    ) -> ClusterError:
+        sid = node.shard.shard_id
+        verb = "returned corrupt data" if kind == "corrupt" else "failed"
+        if attempts == 0:
+            exc = ClusterError(
+                f"shard {sid}: primary node {node.node_id} {verb} "
+                "and no replica is configured"
+            )
+        else:
+            exc = ClusterError(
+                f"shard {sid}: primary and replica both failed "
+                f"(retry budget {self.retry_policy.budget} exhausted, "
+                f"last fault: {kind})"
+            )
+        exc.kind = kind
+        return exc
+
+    def _maybe_hedge(
+        self,
+        node: StorageNode,
+        resp: NodeResponse,
+        query: Query,
+        g: _Gather,
+        tracer=None,
+    ) -> NodeResponse:
+        """Hedge a modeled straggler onto its replica (DESIGN.md §14).
+
+        Operates on the modeled clock: when the completed response's
+        modeled time exceeds the hedge delay (fixed or quantile of the
+        gather's completed shards), the shard is re-issued to the
+        replica and the faster of the two modeled finishes wins —
+        primary at ``modeled_s``, replica at ``delay + modeled_s`` —
+        after the two responses are proven bit-identical
+        (:class:`IntegrityError` otherwise, never a silent pick)."""
+        if self.hedge is None or resp.cached or resp.pruned:
+            return resp
+        replica = self.replicas.get(node.shard.shard_id)
+        if replica is None or resp.node_id == replica.node_id:
+            return resp
+        delay = self.hedge.delay(list(g.samples))
+        if resp.modeled_s <= delay:
+            return resp
+        sid = node.shard.shard_id
+        try:
+            hresp = self._execute_node(replica, query, tracer=tracer)
+        except RETRYABLE:
+            # the hedge itself faulted: keep the primary's response
+            g.hedges.append((sid, "cancelled"))
+            self._inc("cluster_hedges_total", outcome="cancelled")
+            return resp
+        if not self._responses_identical(resp, hresp):
+            raise IntegrityError(
+                f"shard {sid}: hedged replica {replica.node_id} disagrees "
+                f"with node {resp.node_id} bit-for-bit — refusing to pick"
+            )
+        effective = delay + hresp.modeled_s
+        if effective < resp.modeled_s:
+            g.hedges.append((sid, "won"))
+            self._inc("cluster_hedges_total", outcome="won")
+            return replace(hresp, modeled_s=effective)
+        g.hedges.append((sid, "lost"))
+        self._inc("cluster_hedges_total", outcome="lost")
+        return resp
+
     def _serve_shard(
         self,
         node: StorageNode,
         query: Query,
         qh: str,
-        retries: list[tuple[int, int, int]],
+        g: _Gather,
         tracer=None,
     ) -> NodeResponse:
-        """Prune consult -> cache consult -> primary -> replica retry."""
+        """Prune consult -> cache consult -> primary -> retry loop under
+        the :class:`RetryPolicy` -> hedge consult."""
         if self.prune:
             pruned = self._pruned_response(node, query)
             if pruned is not None:
@@ -393,37 +612,44 @@ class ClusterCoordinator:
             hit = self.cache.get(key)
             if hit is not None:
                 return self._hit_response(hit, node)
-        ntr = self._node_tracer(tracer, node)
-        try:
-            # pass the kwarg only when tracing — fault-injection tests
-            # stub ``execute`` with plain callables
-            resp = (
-                node.execute(query, tracer=ntr)
-                if ntr is not None
-                else node.execute(query)
-            )
-        except NodeFailure:
-            replica = self.replicas.get(node.shard.shard_id)
-            if replica is None:
-                raise ClusterError(
-                    f"shard {node.shard.shard_id}: primary node "
-                    f"{node.node_id} failed and no replica is configured"
-                ) from None
-            rtr = self._node_tracer(tracer, replica)
+        policy = self.retry_policy
+        replica = self.replicas.get(node.shard.shard_id)
+        targets = policy.targets(node, replica)
+        sid = node.shard.shard_id
+        current = node
+        attempt = 0
+        backoff_total = 0.0
+        while True:
             try:
-                resp = (
-                    replica.execute(query, tracer=rtr)
-                    if rtr is not None
-                    else replica.execute(query)
+                resp = self._execute_node(current, query, tracer=tracer)
+                break
+            except RETRYABLE as exc:
+                kind = classify_fault(exc)
+                if kind == "corrupt":
+                    g.corrupts.append(sid)
+                    self._inc("cluster_corrupt_baskets_total")
+                if attempt >= len(targets):
+                    raise self._terminal_error(node, kind, attempt) from exc
+                nxt = targets[attempt]
+                attempt += 1
+                backoff = policy.backoff_s(attempt, sid)
+                backoff_total += backoff
+                g.events.append(
+                    RetryEvent(
+                        sid, attempt, kind,
+                        current.node_id, nxt.node_id, backoff,
+                    )
                 )
-            except NodeFailure as exc:
-                raise ClusterError(
-                    f"shard {node.shard.shard_id}: primary and replica "
-                    "both failed"
-                ) from exc
-            retries.append(
-                (node.shard.shard_id, node.node_id, replica.node_id)
-            )
+                g.retries.append((sid, current.node_id, nxt.node_id))
+                self._inc("cluster_retries_total", error=kind)
+                current = nxt
+        if backoff_total:
+            # backoff is modeled, never slept: it stretches the shard's
+            # modeled time (and therefore the cluster makespan) exactly
+            resp = replace(resp, modeled_s=resp.modeled_s + backoff_total)
+        resp = self._maybe_hedge(node, resp, query, g, tracer=tracer)
+        if not (resp.cached or resp.pruned):
+            g.samples.append(resp.modeled_s)
         if self.cache is not None:
             # strip the span list: a future replay of this entry must not
             # re-adopt this execution's spans into an unrelated tree
@@ -442,34 +668,67 @@ class ClusterCoordinator:
         node: StorageNode,
         query: Query,
         qh: str,
-        retries: list[tuple[int, int, int]],
+        g: _Gather,
         tracer=None,
+        modeled: bool = False,
     ) -> NodeResponse:
-        """A primary blew the shard deadline: retry on the replica, or
-        raise :class:`NodeTimeout`.  The replica runs on the gather
-        thread — a second deadline would need its own pool; one retry
-        per shard matches the :class:`NodeFailure` policy."""
-        replica = self.replicas.get(node.shard.shard_id)
-        if replica is None:
+        """A primary blew the shard deadline (wall-clock in threads mode,
+        modeled in serial mode): re-issue under the retry policy, or
+        raise :class:`NodeTimeout`.  Retries run on the gather thread —
+        a second wall deadline would need its own pool — and a fallback
+        that is *itself* over the modeled deadline still times out."""
+        sid = node.shard.shard_id
+        replica = self.replicas.get(sid)
+        targets = self.retry_policy.targets(node, replica)
+        if not targets:
             raise NodeTimeout(
-                f"shard {node.shard.shard_id}: node {node.node_id} "
+                f"shard {sid}: node {node.node_id} "
                 f"exceeded the {self.shard_timeout_s}s shard deadline "
                 "and no replica is configured"
             )
-        rtr = self._node_tracer(tracer, replica)
-        try:
-            resp = (
-                replica.execute(query, tracer=rtr)
-                if rtr is not None
-                else replica.execute(query)
+        policy = self.retry_policy
+        failed = node
+        resp = None
+        last: Exception | None = None
+        backoff_total = 0.0
+        for attempt, nxt in enumerate(targets, start=1):
+            backoff = policy.backoff_s(attempt, sid)
+            backoff_total += backoff
+            g.events.append(
+                RetryEvent(
+                    sid, attempt, "timeout" if attempt == 1 else
+                    classify_fault(last), failed.node_id, nxt.node_id,
+                    backoff,
+                )
             )
-        except NodeFailure as exc:
-            raise NodeTimeout(
-                f"shard {node.shard.shard_id}: node {node.node_id} "
+            g.retries.append((sid, failed.node_id, nxt.node_id))
+            self._inc("cluster_retries_total", error="timeout")
+            try:
+                resp = self._execute_node(nxt, query, tracer=tracer)
+                break
+            except RETRYABLE as exc:
+                if classify_fault(exc) == "corrupt":
+                    g.corrupts.append(sid)
+                    self._inc("cluster_corrupt_baskets_total")
+                last = exc
+                failed = nxt
+        if resp is None:
+            exc = NodeTimeout(
+                f"shard {sid}: node {node.node_id} "
                 f"exceeded the {self.shard_timeout_s}s shard deadline "
                 "and the replica failed"
-            ) from exc
-        retries.append((node.shard.shard_id, node.node_id, replica.node_id))
+            )
+            exc.kind = "timeout"
+            raise exc from last
+        resp = replace(resp, modeled_s=resp.modeled_s + backoff_total)
+        if modeled and self._deadline_blown(resp):
+            exc = NodeTimeout(
+                f"shard {sid}: retry target node {resp.node_id} also "
+                f"exceeded the {self.shard_timeout_s}s modeled shard "
+                "deadline"
+            )
+            exc.kind = "timeout"
+            raise exc
         if self.cache is not None:
             self.cache.put(
                 versioned_key(qh, node.shard.manifest_hash),
@@ -481,35 +740,114 @@ class ClusterCoordinator:
             )
         return resp
 
-    def _gather_threads(self, query: Query, qh: str, retries, tracer=None):
+    def _deadline_blown(self, resp: NodeResponse) -> bool:
+        """Modeled-clock deadline check — serial mode only.  Threads
+        mode keeps the deadline in the wall currency (the two are not
+        comparable: a modeled straggler resolves instantly on this
+        host, and a wall hang has no modeled time at all)."""
+        return (
+            self.shard_timeout_s is not None
+            and not resp.cached
+            and not resp.pruned
+            and resp.modeled_s > self.shard_timeout_s
+        )
+
+    def _shard_error(self, node: StorageNode, exc: Exception) -> ShardError:
+        """Fold one terminal shard failure into the degradation
+        manifest: every window the shard owned, with its global event
+        span, is explicitly missing."""
+        kind = getattr(exc, "kind", None) or (
+            "timeout" if isinstance(exc, NodeTimeout) else "fail"
+        )
+        we = node.shard.window_events
+        spans = [
+            (w * we, min(w * we + we, self.total_events))
+            for w in node.shard.window_ids
+        ]
+        self._inc("cluster_degraded_shards_total", error=kind)
+        return ShardError(
+            shard_id=node.shard.shard_id,
+            node_id=node.node_id,
+            kind=kind,
+            message=str(exc),
+            window_ids=list(node.shard.window_ids),
+            spans=spans,
+        )
+
+    def _gather_serial(
+        self, query: Query, qh: str, g: _Gather, tracer, allow_partial: bool
+    ):
+        """Serially-deterministic gather.  ``shard_timeout_s`` is
+        enforced against the modeled clock (a serial in-process loop has
+        no wall-clock preemption point) — a shard whose modeled time
+        exceeds the deadline is re-issued exactly like a threads-mode
+        wall timeout."""
+        for node in self.nodes:
+            try:
+                resp = self._serve_shard(node, query, qh, g, tracer=tracer)
+                if self._deadline_blown(resp):
+                    resp = self._timeout_fallback(
+                        node, query, qh, g, tracer=tracer, modeled=True
+                    )
+            except ClusterError as exc:
+                if not allow_partial:
+                    raise
+                g.errors.append(self._shard_error(node, exc))
+                continue
+            yield resp
+
+    def _gather_threads(
+        self, query: Query, qh: str, g: _Gather, tracer, allow_partial: bool
+    ):
         """Scatter to the pool, yield responses in shard order as they
         resolve, each bounded by ``shard_timeout_s``.  With a deadline
         configured the pool is NOT joined on exit — a hung worker must
-        not block the gather that just timed it out."""
-        ex = ThreadPoolExecutor(max_workers=len(self.nodes))
+        not block the gather that just timed it out (see
+        :class:`NodeTimeout` for the leak semantics); gather threads are
+        named ``skim-gather-*`` so a leaked one is identifiable."""
+        ex = ThreadPoolExecutor(
+            max_workers=len(self.nodes), thread_name_prefix="skim-gather"
+        )
         try:
             futs = [
-                ex.submit(
-                    self._serve_shard, node, query, qh, retries, tracer
-                )
+                ex.submit(self._serve_shard, node, query, qh, g, tracer)
                 for node in self.nodes
             ]
             for node, fut in zip(self.nodes, futs):
                 try:
-                    yield fut.result(timeout=self.shard_timeout_s)
-                except FutureTimeout:
-                    yield self._timeout_fallback(
-                        node, query, qh, retries, tracer
-                    )
+                    try:
+                        resp = fut.result(timeout=self.shard_timeout_s)
+                    except FutureTimeout:
+                        resp = self._timeout_fallback(
+                            node, query, qh, g, tracer=tracer
+                        )
+                except ClusterError as exc:
+                    if not allow_partial:
+                        raise
+                    g.errors.append(self._shard_error(node, exc))
+                    continue
+                yield resp
         finally:
             ex.shutdown(
                 wait=self.shard_timeout_s is None, cancel_futures=True
             )
 
-    def run(self, query: Query | dict | str, tracer=None) -> ClusterSkimResult:
-        return drain(self.iter_run(query, tracer=tracer))
+    def run(
+        self,
+        query: Query | dict | str,
+        tracer=None,
+        allow_partial: bool | None = None,
+    ) -> ClusterSkimResult:
+        return drain(
+            self.iter_run(query, tracer=tracer, allow_partial=allow_partial)
+        )
 
-    def iter_run(self, query: Query | dict | str, tracer=None):
+    def iter_run(
+        self,
+        query: Query | dict | str,
+        tracer=None,
+        allow_partial: bool | None = None,
+    ):
         """Streaming form of :meth:`run`: a generator yielding each
         shard's :class:`NodeResponse` (with its per-window survivor
         ledger) as the gather progresses, in shard order, and returning
@@ -518,11 +856,20 @@ class ClusterCoordinator:
         shards abandons the remaining gather — the service layer's
         cancellation point.
 
+        ``allow_partial`` (default: the coordinator's stance) degrades
+        shards that exhaust their retry budget into a
+        :class:`DegradedResult` instead of raising — unless *every*
+        shard failed, which always raises.  :class:`IntegrityError`
+        always propagates regardless.
+
         ``tracer`` records the cluster span tree: a ``cluster_query``
         root, the one-shot plan/compile, and — under the ``merge``
         umbrella — one ``shard`` span per response with the node's own
         spans adopted beneath it (exactly once; cached and pruned
-        responses have none)."""
+        responses have none), plus one ``retry`` / ``hedge`` span per
+        fault-layer event."""
+        if allow_partial is None:
+            allow_partial = self.allow_partial
         tr = tracer if tracer is not None else NULL_TRACER
         t0 = time.perf_counter()
         qsid = tr.begin(
@@ -537,15 +884,12 @@ class ClusterCoordinator:
             "plan", kind="plan", t0=plan_t0, t1=tr.now(),
             parent=qsid, query_hash=qh,
         )
-        retries: list[tuple[int, int, int]] = []
+        g = _Gather()
 
         if self.concurrency == "threads":
-            gather = self._gather_threads(q, qh, retries, tracer=tracer)
+            gather = self._gather_threads(q, qh, g, tracer, allow_partial)
         else:
-            gather = (
-                self._serve_shard(node, q, qh, retries, tracer=tracer)
-                for node in self.nodes
-            )
+            gather = self._gather_serial(q, qh, g, tracer, allow_partial)
         # the merge span is the umbrella for the whole gather: every
         # shard span (and the node spans adopted under it) re-parents
         # here, so the export shows scatter + reassembly as one phase
@@ -570,6 +914,25 @@ class ClusterCoordinator:
                 tr.end(msid, cancelled=True)
                 tr.end(qsid, cancelled=True)
                 raise
+        for ev in g.events:
+            tr.add_span(
+                f"retry[shard {ev.shard_id}]", kind="retry",
+                t0=tr.now(), t1=tr.now(), parent=msid,
+                shard=ev.shard_id, attempt=ev.attempt, error=ev.error,
+                failed_node=ev.failed_node, next_node=ev.next_node,
+                backoff_s=ev.backoff_s,
+            )
+        for sid, outcome in g.hedges:
+            tr.add_span(
+                f"hedge[shard {sid}]", kind="hedge",
+                t0=tr.now(), t1=tr.now(), parent=msid,
+                shard=sid, outcome=outcome,
+            )
+        if not responses:
+            tr.end(msid, failed=True)
+            tr.end(qsid, failed=True)
+            errs = "; ".join(e.message for e in g.errors) or "no shards"
+            raise ClusterError(f"every shard failed: {errs}")
 
         t_merge = time.perf_counter()
         output, n_input, n_passed = merge_responses(
@@ -582,26 +945,48 @@ class ClusterCoordinator:
         stats = FetchStats.merged([r.result.stats for r in responses])
         slowest = max((r.modeled_s for r in responses), default=0.0)
         tr.end(qsid, n_passed=n_passed, bytes=stats.bytes_fetched)
-        return ClusterSkimResult(
+        extras = make_extras(
+            output_bytes=output.compressed_bytes(),
+            n_nodes=len(self.nodes),
+            concurrency=self.concurrency,
+            query_hash=qh,
+            pruned_shards=[r.shard_id for r in responses if r.pruned],
+            prune_saved_bytes=stats.bytes_skipped,
+            retry_attempts=len(g.events),
+            retry_backoff_s=g.backoff_s,
+            corrupt_baskets=len(g.corrupts),
+        )
+        if self.hedge is not None:
+            extras.update(
+                make_extras(
+                    hedges_won=g.hedge_count("won"),
+                    hedges_lost=g.hedge_count("lost"),
+                    hedges_cancelled=g.hedge_count("cancelled"),
+                )
+            )
+        common = dict(
             output=output,
             n_input=n_input,
             n_passed=n_passed,
             breakdown=breakdown,
             stats=stats,
             responses=responses,
-            retries=retries,
+            retries=g.retries,
             modeled_total_s=slowest + merge_s,
             merge_s=merge_s,
             wall_s=time.perf_counter() - t0,
-            extras=make_extras(
-                output_bytes=output.compressed_bytes(),
-                n_nodes=len(self.nodes),
-                concurrency=self.concurrency,
-                query_hash=qh,
-                pruned_shards=[r.shard_id for r in responses if r.pruned],
-                prune_saved_bytes=stats.bytes_skipped,
-            ),
+            extras=extras,
         )
+        if g.errors:
+            result = DegradedResult(**common, errors=list(g.errors))
+            extras.update(
+                make_extras(
+                    degraded=True,
+                    missing_windows=result.missing_windows,
+                )
+            )
+            return result
+        return ClusterSkimResult(**common)
 
     # -- tenant batches (shared scan per node) --------------------------------
 
@@ -637,26 +1022,33 @@ class ClusterCoordinator:
             live_queries = [compiled[ti][0] for ti in live]
 
             def scan(node: StorageNode) -> BatchResponse:
-                try:
-                    return node.execute_batch(live_queries)
-                except NodeFailure:
-                    replica = self.replicas.get(node.shard.shard_id)
-                    if replica is None:
-                        raise ClusterError(
-                            f"shard {node.shard.shard_id}: primary failed "
-                            "and no replica is configured"
-                        ) from None
+                """Shared scan under the same retry policy as single
+                queries: re-issue on any RETRYABLE fault, walking the
+                policy's target list."""
+                sid = node.shard.shard_id
+                replica = self.replicas.get(sid)
+                targets = self.retry_policy.targets(node, replica)
+                current, attempt = node, 0
+                while True:
                     try:
-                        resp = replica.execute_batch(live_queries)
-                    except NodeFailure as exc:
-                        raise ClusterError(
-                            f"shard {node.shard.shard_id}: primary and "
-                            "replica both failed"
-                        ) from exc
-                    retries.append(
-                        (node.shard.shard_id, node.node_id, replica.node_id)
-                    )
-                    return resp
+                        return current.execute_batch(live_queries)
+                    except RETRYABLE as exc:
+                        kind = classify_fault(exc)
+                        if attempt >= len(targets):
+                            if attempt == 0:
+                                raise ClusterError(
+                                    f"shard {sid}: primary failed "
+                                    "and no replica is configured"
+                                ) from exc
+                            raise ClusterError(
+                                f"shard {sid}: primary and "
+                                "replica both failed"
+                            ) from exc
+                        nxt = targets[attempt]
+                        attempt += 1
+                        retries.append((sid, current.node_id, nxt.node_id))
+                        self._inc("cluster_retries_total", error=kind)
+                        current = nxt
 
             if self.concurrency == "threads":
                 with ThreadPoolExecutor(max_workers=len(self.nodes)) as ex:
@@ -763,6 +1155,10 @@ def build_cluster(
     prune: bool = True,
     cascade: bool = True,
     shard_timeout_s: float | None = None,
+    retry_policy: RetryPolicy = DEFAULT_RETRY_POLICY,
+    hedge: HedgePolicy | None = None,
+    metrics=None,
+    allow_partial: bool = False,
     **node_kw,
 ) -> ClusterCoordinator:
     """Partition ``store`` over ``n_nodes`` storage nodes and wire up a
@@ -803,4 +1199,8 @@ def build_cluster(
         codec=store.codec,
         prune=prune,
         shard_timeout_s=shard_timeout_s,
+        retry_policy=retry_policy,
+        hedge=hedge,
+        metrics=metrics,
+        allow_partial=allow_partial,
     )

@@ -11,9 +11,15 @@ to the client), so a cluster can model heterogeneous fleets.
 
 Failure realism is injectable and deterministic: ``inject_fault("fail")``
 makes the next request(s) raise :class:`NodeFailure` (the coordinator
-retries on a replica); ``inject_fault("straggle", delay_s=...)`` adds
-modeled seconds to the response so tail-latency behavior is visible in
-the cluster schedule without sleeping the host.
+retries under its :class:`~repro.cluster.retry.RetryPolicy`);
+``inject_fault("straggle", delay_s=...)`` adds modeled seconds to the
+response so tail-latency behavior is visible in the cluster schedule
+without sleeping the host; ``inject_fault("corrupt")`` flips bits on the
+node's read path for the next request — the store's integrity digests
+catch it (:class:`~repro.data.store.CorruptBasket`), the node
+quarantines the (shard, branch, basket) in :attr:`StorageNode.quarantine`,
+and the blob is restored afterwards (transient read corruption, so the
+replica — which shares the baskets in-process — re-fetches clean bytes).
 """
 
 from __future__ import annotations
@@ -23,10 +29,11 @@ from dataclasses import dataclass, field
 
 from repro.cluster.shard import Shard
 from repro.core.engine import PCIE_128G, NetworkModel, SkimEngine, SkimResult, WAN_1G
-from repro.core.query import Query
+from repro.core.query import Query, parse_query
+from repro.data.store import CorruptBasket
 from repro.serve.engine import SharedScanEngine, SharedScanResult
 
-FAULT_KINDS = ("fail", "straggle")
+FAULT_KINDS = ("fail", "straggle", "corrupt")
 
 
 class NodeFailure(RuntimeError):
@@ -35,9 +42,14 @@ class NodeFailure(RuntimeError):
 
 @dataclass
 class _Fault:
-    kind: str  # "fail" | "straggle"
+    kind: str  # "fail" | "straggle" | "corrupt"
     remaining: int  # requests still affected
     delay_s: float = 0.0
+    # corrupt faults: which basket to damage; branch=None picks the
+    # query's first filter branch (guaranteed to be fetched for any
+    # non-pruned window)
+    branch: str | None = None
+    basket: int = 0
 
 
 @dataclass
@@ -120,17 +132,35 @@ class StorageNode:
         )
         self._faults: list[_Fault] = []
         self.requests_served = 0
+        # node-local quarantine of baskets that failed their integrity
+        # digest on this node's read path: {(shard_id, branch, basket)}.
+        # The coordinator ledgers its size (extras["corrupt_baskets"])
+        # and re-fetches the shard from the replica (DESIGN.md §14).
+        self.quarantine: set[tuple[int, str, int]] = set()
 
     # -- fault injection -----------------------------------------------------
 
-    def inject_fault(self, kind: str, n: int = 1, delay_s: float = 0.0) -> None:
-        """Arm a deterministic fault for the next ``n`` requests."""
+    def inject_fault(
+        self,
+        kind: str,
+        n: int = 1,
+        delay_s: float = 0.0,
+        branch: str | None = None,
+        basket: int = 0,
+    ) -> None:
+        """Arm a deterministic fault for the next ``n`` requests.
+        ``branch``/``basket`` pick the corruption target for
+        ``kind="corrupt"`` (default: the query's first filter branch,
+        basket 0)."""
         if kind not in FAULT_KINDS:
             raise ValueError(f"unknown fault kind {kind!r} (want {FAULT_KINDS})")
-        self._faults.append(_Fault(kind, max(int(n), 1), delay_s))
+        self._faults.append(
+            _Fault(kind, max(int(n), 1), delay_s, branch=branch, basket=basket)
+        )
 
-    def _consume_fault(self) -> float:
-        """Apply at most one armed fault; returns modeled straggle seconds."""
+    def _consume_fault(self) -> tuple[float, _Fault | None]:
+        """Apply at most one armed fault; returns ``(straggle_s,
+        corrupt_fault_or_None)``."""
         straggle = 0.0
         for f in list(self._faults):
             if f.remaining <= 0:
@@ -144,9 +174,25 @@ class StorageNode:
                     f"node {self.node_id} (shard {self.shard.shard_id}): "
                     "injected failure"
                 )
+            if f.kind == "corrupt":
+                return 0.0, f
             straggle += f.delay_s
             break  # one fault per request
-        return straggle
+        return straggle, None
+
+    def _arm_corruption(self, query, fault: _Fault):
+        """Damage the fault's target blob on this node's store; returns
+        the ``restore()`` callable (transient read-path corruption)."""
+        store = self.shard.store
+        branch = fault.branch
+        if branch is None:
+            from repro.core.planner import plan_skim
+
+            q = query if isinstance(query, Query) else parse_query(query)
+            plan = plan_skim(q, store)
+            branch = plan.filter_branches[0]
+        basket = min(fault.basket, max(store.n_baskets(branch) - 1, 0))
+        return store.corrupt_blob(branch, basket)
 
     # -- request API ---------------------------------------------------------
 
@@ -156,9 +202,21 @@ class StorageNode:
         ``tracer`` is a node-local :class:`~repro.obs.trace.Tracer`; its
         recorded spans travel back on ``NodeResponse.trace`` for the
         coordinator to adopt into the query-level tree."""
-        straggle = self._consume_fault()
+        straggle, corrupt = self._consume_fault()
+        restore = (
+            self._arm_corruption(query, corrupt) if corrupt is not None else None
+        )
         t0 = time.perf_counter()
-        result = self.engine.run(query, mode="near_data", tracer=tracer)
+        try:
+            result = self.engine.run(query, mode="near_data", tracer=tracer)
+        except CorruptBasket as exc:
+            self.quarantine.add(
+                (self.shard.shard_id, exc.branch, exc.basket_id)
+            )
+            raise
+        finally:
+            if restore is not None:
+                restore()
         self.requests_served += 1
         return NodeResponse(
             node_id=self.node_id,
@@ -175,9 +233,23 @@ class StorageNode:
         self, queries: list[Query | dict | str], tracer=None
     ) -> BatchResponse:
         """Run a tenant batch as ONE shared scan over this node's shard."""
-        straggle = self._consume_fault()
+        straggle, corrupt = self._consume_fault()
+        restore = (
+            self._arm_corruption(queries[0], corrupt)
+            if corrupt is not None and queries
+            else None
+        )
         t0 = time.perf_counter()
-        batch = self.shared_engine.run_batch(queries, tracer=tracer)
+        try:
+            batch = self.shared_engine.run_batch(queries, tracer=tracer)
+        except CorruptBasket as exc:
+            self.quarantine.add(
+                (self.shard.shard_id, exc.branch, exc.basket_id)
+            )
+            raise
+        finally:
+            if restore is not None:
+                restore()
         self.requests_served += 1
         wall = time.perf_counter() - t0
         responses = [

@@ -30,7 +30,12 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.data.codecs import basket_stats, decode_basket, encode_basket
+from repro.data.codecs import (
+    basket_digest,
+    basket_stats,
+    decode_basket,
+    encode_basket,
+)
 
 # Paper §4: "A 100 MB TTreeCache is used in all methods".  The coalesced
 # window fetch aggregates every basket a read round needs into bulk
@@ -43,8 +48,39 @@ TTREECACHE_BYTES = 100 * 1024 * 1024
 # stat semantics change (DESIGN.md §9).
 ZONEMAP_VERSION = 1
 
+# Version of the basket integrity schema: since v1 every BasketMeta row
+# carries a CRC-32 digest of its encoded blob, recomputed (and enforced)
+# on every fetch.  Carried in the manifest like ZONEMAP_VERSION, so
+# digest-bearing stores hash to different content addresses than legacy
+# ones (DESIGN.md §14).
+INTEGRITY_VERSION = 1
+
 # Default capacity (in baskets) of the per-store decoded-basket LRU.
 DECODE_CACHE_BASKETS = 64
+
+
+class CorruptBasket(RuntimeError):
+    """A fetched basket blob failed its integrity digest.
+
+    Raised by the fetch path (:meth:`EventStore.fetch_basket` /
+    :meth:`EventStore.fetch_range`, and therefore
+    :meth:`EventStore.fetch_window`) before any decode — corrupt bytes
+    never reach the filter.  The cluster layer treats this like a node
+    fault: the shard is retried under the
+    :class:`~repro.cluster.retry.RetryPolicy` (typically re-fetching
+    from the replica) and the (shard, branch, basket) is quarantined on
+    the node (DESIGN.md §14).
+    """
+
+    def __init__(self, branch: str, basket_id: int, expected: int, actual: int):
+        super().__init__(
+            f"basket {branch}[{basket_id}]: digest mismatch "
+            f"(expected {expected:#010x}, got {actual:#010x})"
+        )
+        self.branch = branch
+        self.basket_id = basket_id
+        self.expected = expected
+        self.actual = actual
 
 
 @dataclass
@@ -73,12 +109,16 @@ class BasketMeta:
     vmin: float | None = None
     vmax: float | None = None
     n_true: int | None = None
+    # CRC-32 of the encoded blob (INTEGRITY_VERSION).  ``None`` means
+    # "unverifiable" (a store written before the digest upgrade) and
+    # degrades to skipping the check — never to a false alarm.
+    digest: int | None = None
 
     def stats_row(self) -> list:
         return [
             self.first_entry, self.n_entries, self.n_values,
             self.comp_bytes, self.raw_bytes,
-            self.vmin, self.vmax, self.n_true,
+            self.vmin, self.vmax, self.n_true, self.digest,
         ]
 
 
@@ -212,7 +252,10 @@ class WindowPrefetcher:
         from collections import deque
         from concurrent.futures import ThreadPoolExecutor
 
-        with ThreadPoolExecutor(max_workers=1) as ex:
+        ex = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="skim-prefetch"
+        )
+        try:
             pending: deque = deque()
             it = iter(spans)
             for _ in range(self.depth):
@@ -231,6 +274,17 @@ class WindowPrefetcher:
                     pass
                 # the next window is now decoding while the consumer works
                 yield start, stop, payload
+        finally:
+            # Cancellation-under-fault contract (pinned by
+            # tests/test_faults.py): closing the generator — or a worker
+            # exception surfacing through ``fut.result()`` — cancels
+            # every queued-but-unstarted load and joins only the one in
+            # flight.  Unconsumed payloads are dropped here without
+            # touching the consumer's ledger, so ``FetchStats`` can
+            # never double-account a window that was never yielded; an
+            # in-flight worker that raises parks its exception in the
+            # abandoned future (never re-raised).
+            ex.shutdown(wait=True, cancel_futures=True)
 
 
 class EventStore:
@@ -241,9 +295,14 @@ class EventStore:
         basket_events: int = 4096,
         codec: str = "bitpack",
         decode_cache_baskets: int = DECODE_CACHE_BASKETS,
+        verify: bool = True,
     ):
         self.basket_events = int(basket_events)
         self.codec = codec
+        # enforce basket digests on every fetch (INTEGRITY_VERSION);
+        # ``False`` restores the unverified fast path for A/B costing
+        # (benchmarks/bench_faults.py pins the overhead under 2%)
+        self.verify = bool(verify)
         self.branches: dict[str, Branch] = {}
         self.n_events = 0
         self._baskets: dict[str, list[BasketMeta]] = {}
@@ -313,6 +372,7 @@ class EventStore:
                 BasketMeta(
                     start, stop - start, len(chunk), len(blob), chunk.nbytes,
                     vmin=vmin, vmax=vmax, n_true=n_true,
+                    digest=basket_digest(blob),
                 )
             )
             blobs.append(blob)
@@ -336,6 +396,7 @@ class EventStore:
                 BasketMeta(
                     start, stop - start, len(chunk), len(blob), chunk.nbytes,
                     vmin=vmin, vmax=vmax, n_true=n_true,
+                    digest=basket_digest(blob),
                 )
             )
             blobs.append(blob)
@@ -425,12 +486,18 @@ class EventStore:
         the manifest hash usable as a content address for skim results
         (DESIGN.md §5).  Since ZONEMAP_VERSION 1 every basket row also
         carries its zone-map stats, so shard manifests ship the pruning
-        metadata for free and any stat change re-addresses the content."""
+        metadata for free and any stat change re-addresses the content.
+        Since INTEGRITY_VERSION 1 each row also carries the blob's CRC-32
+        digest — digest-bearing stores therefore hash differently from
+        legacy ones, re-addressing every cluster cache key without a
+        CACHE_KEY_VERSION bump (digests are deterministic functions of
+        the basket contents, so re-encoding identical data still hits)."""
         return {
             "n_events": self.n_events,
             "basket_events": self.basket_events,
             "codec": self.codec,
             "zonemap_version": ZONEMAP_VERSION,
+            "integrity_version": INTEGRITY_VERSION,
             "branches": {
                 n: [b.dtype, b.jagged, b.counts_branch]
                 for n, b in sorted(self.branches.items())
@@ -483,10 +550,37 @@ class EventStore:
 
     # -- basket access ------------------------------------------------------
 
+    def _verify_blob(self, name: str, basket_id: int, blob: bytes) -> None:
+        """Recompute and enforce one blob's digest (no-op for legacy
+        metadata without one, or with ``verify=False``)."""
+        meta = self._baskets[name][basket_id]
+        if meta.digest is None:
+            return
+        actual = basket_digest(blob)
+        if actual != meta.digest:
+            raise CorruptBasket(name, basket_id, meta.digest, actual)
+
+    def corrupt_blob(self, name: str, basket_id: int, xor: int = 0xFF):
+        """Deterministically flip bits in one stored blob (fault
+        injection for tests/chaos).  Returns a zero-arg ``restore()``
+        callable that puts the original bytes back — the chaos harness
+        models transient read-path corruption, not durable media loss."""
+        blobs = self._blobs[name]
+        original = blobs[basket_id]
+        corrupted = bytes([original[0] ^ (xor & 0xFF)]) + original[1:]
+        blobs[basket_id] = corrupted
+
+        def restore():
+            blobs[basket_id] = original
+
+        return restore
+
     def fetch_basket(
         self, name: str, basket_id: int, stats: FetchStats | None = None
     ) -> bytes:
         blob = self._blobs[name][basket_id]
+        if self.verify:
+            self._verify_blob(name, basket_id, blob)
         if stats is not None:
             stats.record(name, len(blob))
         return blob
@@ -512,6 +606,8 @@ class EventStore:
         total = 0
         for i in ids:
             blob = self._blobs[name][i]
+            if self.verify:
+                self._verify_blob(name, i, blob)
             total += len(blob)
             out.append((self._baskets[name][i], blob))
         if stats is not None:
@@ -645,6 +741,7 @@ class EventStore:
             "codec": self.codec,
             "n_events": self.n_events,
             "zonemap_version": ZONEMAP_VERSION,
+            "integrity_version": INTEGRITY_VERSION,
             "branches": {
                 n: {
                     "dtype": b.dtype,

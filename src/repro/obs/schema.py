@@ -57,6 +57,15 @@ KNOWN_EXTRAS = frozenset(
         "pruned_shards",
         "prune_saved_bytes",
         "tenant",
+        # fault-tolerance ledger (coordinator / DESIGN.md §14)
+        "retry_attempts",
+        "retry_backoff_s",
+        "corrupt_baskets",
+        "hedges_won",
+        "hedges_lost",
+        "hedges_cancelled",
+        "degraded",
+        "missing_windows",
     }
 )
 

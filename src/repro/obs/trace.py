@@ -26,7 +26,10 @@ constraints, in order:
 Span taxonomy (the ``kind`` field): ``query``, ``plan``, ``window``,
 ``cascade_stage``, ``fetch``, ``decode``, ``kernel``, ``write``,
 ``shard``, ``merge``, ``job``, ``admission``, ``queue``, ``settle``,
-``tenant``.  See DESIGN.md §13 for what each covers.
+``tenant``, and the fault-tolerance kinds ``retry`` (one per re-issued
+shard, attrs: failed/used node), ``hedge`` (one per hedged shard,
+attrs: outcome won/lost/cancelled), ``recover`` (one per journal-
+recovered job, attrs: resume_skip).  See DESIGN.md §13–14.
 """
 
 from __future__ import annotations

@@ -24,6 +24,7 @@ from repro.serve.jobs import (
     price_query,
     union_columns,
 )
+from repro.serve.journal import JOURNAL_EVENTS, JOURNAL_VERSION, JobJournal
 from repro.serve.service import (
     ClusterBackend,
     DeterministicExecutor,
@@ -44,6 +45,9 @@ __all__ = [
     "CostEstimate",
     "DeterministicExecutor",
     "EngineBackend",
+    "JOURNAL_EVENTS",
+    "JOURNAL_VERSION",
+    "JobJournal",
     "ManualClock",
     "PartialResult",
     "SharedScanEngine",

@@ -193,6 +193,10 @@ class SkimJob:
     # weighted-fair virtual finish time + submission ordinal (FIFO tiebreak)
     vfinish: float = 0.0
     seq: int = 0
+    # journal recovery (repro.serve.journal): windows already streamed
+    # before the crash — the restarted executor recomputes but does not
+    # re-stream them, so the post-recovery stream is the suffix
+    resume_skip: int = 0
     # per-job span tree (repro.obs.trace.Tracer) when the service runs
     # with tracing on; root_span is the job[..] span every lifecycle
     # span parents under

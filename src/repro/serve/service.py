@@ -51,6 +51,7 @@ from repro.obs.metrics import (
 )
 from repro.obs.trace import Tracer, chrome_trace, trace_json
 from repro.serve.engine import SharedScanEngine
+from repro.serve.journal import JobJournal
 from repro.serve.jobs import (
     CANCELLED,
     DONE,
@@ -275,6 +276,7 @@ class SkimService:
         tracing: bool = False,
         metrics: MetricsRegistry | None = None,
         calibrate: bool = False,
+        journal: JobJournal | None = None,
     ):
         if not hasattr(backend, "start"):
             backend = EngineBackend(backend)
@@ -291,6 +293,11 @@ class SkimService:
         self.tracing = tracing
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.calibrate = calibrate
+        # durability seam (DESIGN.md §14): every lifecycle transition is
+        # appended to the journal before the service moves on, and
+        # :meth:`recover` replays a journal into a fresh service.
+        # Journaling requires JSON-able query docs (dict/str).
+        self.journal = journal
         self._batch_tracers: list[Tracer] = []
         self.jobs: dict[int, SkimJob] = {}
         self._tenants: dict[str, _TenantState] = {}
@@ -345,6 +352,11 @@ class SkimService:
                 job_id=job.job_id, tenant=tenant,
             )
         self.jobs[job.job_id] = job
+        if self.journal is not None:
+            self.journal.append(
+                "submit", job.job_id, job.submitted_at,
+                tenant=tenant, seq=job.seq, query=query,
+            )
         ts = self._tenant(tenant)
         calib = self.metrics.calibration_priors() if self.calibrate else None
         try:
@@ -388,6 +400,19 @@ class SkimService:
                 parent=job.root_span,
                 admitted=True, est_bytes=est.est_bytes,
             )
+        if self.journal is not None:
+            self.journal.append(
+                "admit", job.job_id, self.clock.now(),
+                vfinish=job.vfinish,
+                est_bytes=est.est_bytes,
+                est_phase1_bytes=est.est_phase1_bytes,
+                est_phase2_bytes=est.est_phase2_bytes,
+                est_requests=est.est_requests,
+                est_wall_s=est.est_wall_s,
+                est_selectivity=est.est_selectivity,
+                n_windows=est.n_windows,
+                n_windows_pruned=est.n_windows_pruned,
+            )
         self.metrics.inc("service_jobs_submitted", tenant=tenant)
         return job
 
@@ -403,6 +428,10 @@ class SkimService:
                 admitted=False, reason=reason,
             )
             job.tracer.end(job.root_span, state=REJECTED)
+        if self.journal is not None:
+            self.journal.append(
+                "reject", job.job_id, job.finished_at, reason=reason
+            )
         self.metrics.inc("service_jobs_submitted", tenant=job.tenant)
         self.metrics.inc(
             "service_jobs_total", state=REJECTED, tenant=job.tenant
@@ -502,9 +531,14 @@ class SkimService:
         batching on, for EVERY pending job as one coalesced shared
         scan."""
         now = self.clock.now()
-        if self.batching:
+        if self.batching and not job.resume_skip:
+            # recovered mid-stream jobs run solo: their fast-forward
+            # watermark has no meaning inside a coalesced batch
             members = sorted(
-                (j for j in self.jobs.values() if j.state == PENDING),
+                (
+                    j for j in self.jobs.values()
+                    if j.state == PENDING and not j.resume_skip
+                ),
                 key=lambda j: (j.vfinish, j.seq),
             )
         else:
@@ -549,8 +583,27 @@ class SkimService:
             j.state = RUNNING
             j.started_at = now
             self._runs[j.job_id] = run
+            if self.journal is not None:
+                self.journal.append(
+                    "start", j.job_id, now, resume=j.resume_skip
+                )
         # virtual time advances to the service start of the picked job
         self._vtime = max(self._vtime, job.vfinish)
+        if not run.batch and job.resume_skip:
+            # journal recovery: deterministically re-advance the fresh
+            # generator past the windows whose partials were already
+            # streamed before the crash — recomputed, never re-streamed,
+            # so the post-recovery stream is exactly the suffix
+            try:
+                for _ in range(job.resume_skip):
+                    next(run.gen)
+            except StopIteration as stop:
+                # the crash hit after the final window: settle directly
+                self._finish(run, stop.value)
+                return None
+            except Exception as exc:
+                self._fail(run, exc)
+                return None
         return run
 
     def _advance(self, run: _Run) -> None:
@@ -586,6 +639,14 @@ class SkimService:
                 meta={"decision": wp.decision, "window": wp.index},
             )
         )
+        if self.journal is not None:
+            # the watermark seq is GLOBAL across crashes: a recovered
+            # job's suffix continues where the journaled prefix stopped
+            self.journal.append(
+                "window", job.job_id, self.clock.now(),
+                seq=job.resume_skip + len(job.partials) - 1,
+                start=wp.start, stop=wp.stop, n_passed=wp.n_passed,
+            )
         if len(job.partials) == 1:
             self.metrics.observe(
                 "service_first_partial_s",
@@ -630,6 +691,22 @@ class SkimService:
             ts.spent_bytes += job.result.stats.bytes_fetched
             ts.spent_wall_s += _modeled_seconds(job.result)
             self._record_calibration(job)
+        if self.journal is not None:
+            observed = (
+                job.result.stats.bytes_fetched
+                if job.result is not None
+                else 0
+            )
+            self.journal.append(
+                "settle", job.job_id, job.finished_at,
+                state=state, error=job.error,
+                observed_bytes=observed,
+                modeled_s=(
+                    _modeled_seconds(job.result)
+                    if state == DONE and job.result is not None
+                    else 0.0
+                ),
+            )
         self.metrics.inc("service_jobs_total", state=state, tenant=job.tenant)
         self.metrics.set_gauge(
             "tenant_spent_bytes", ts.spent_bytes, tenant=job.tenant
@@ -709,6 +786,111 @@ class SkimService:
             with open(path, "w") as fh:
                 fh.write(trace_json(doc))
         return doc
+
+    # -- durability ----------------------------------------------------------
+
+    @classmethod
+    def recover(cls, journal: JobJournal, backend, **service_kw) -> "SkimService":
+        """Reconstruct a service from a :class:`JobJournal` after a crash.
+
+        Replays the journal's lifecycle records into a fresh service
+        over ``backend`` (which must serve the same data — the journal
+        stores queries and watermarks, not baskets):
+
+          * terminal jobs return with state, error, and settle-time
+            tenant accounting;
+          * admitted PENDING jobs re-enter the fair queue with their
+            journaled estimate and virtual finish time;
+          * jobs journaled RUNNING resume from their window watermark —
+            the restarted generator recomputes the already-streamed
+            windows without re-streaming them, so the post-recovery
+            stream equals the uninterrupted run's suffix and the final
+            result is bit-identical (pinned by tests/test_journal.py).
+
+        The returned service keeps journaling to the same journal, so
+        recovery composes across repeated crashes.
+        """
+        svc = cls(backend, **service_kw)
+        by_job: dict[int, dict] = {}
+        for rec in journal.records():
+            svc.metrics.inc("journal_replays_total", event=rec["event"])
+            d = by_job.setdefault(rec["job_id"], {"watermark": -1})
+            ev = rec["event"]
+            if ev == "window":
+                d["watermark"] = max(d["watermark"], rec["seq"])
+            else:
+                d[ev] = rec
+        max_id, max_seq = 0, -1
+        for jid in sorted(by_job):
+            d = by_job[jid]
+            sub = d.get("submit")
+            if sub is None:
+                continue  # torn journal head: nothing to rebuild from
+            max_id = max(max_id, jid)
+            max_seq = max(max_seq, sub["seq"])
+            job = SkimJob(
+                job_id=jid,
+                tenant=sub["tenant"],
+                query=sub["query"],
+                submitted_at=sub["t"],
+                seq=sub["seq"],
+            )
+            svc.jobs[jid] = job
+            ts = svc._tenant(job.tenant)
+            rej = d.get("reject")
+            if rej is not None:
+                job.state = REJECTED
+                job.error = rej["reason"]
+                job.finished_at = rej["t"]
+                continue
+            adm = d.get("admit")
+            if adm is not None:
+                job.estimate = CostEstimate(
+                    est_bytes=adm["est_bytes"],
+                    est_phase1_bytes=adm["est_phase1_bytes"],
+                    est_phase2_bytes=adm["est_phase2_bytes"],
+                    est_requests=adm["est_requests"],
+                    est_wall_s=adm["est_wall_s"],
+                    est_selectivity=adm["est_selectivity"],
+                    n_windows=adm["n_windows"],
+                    n_windows_pruned=adm["n_windows_pruned"],
+                )
+                job.vfinish = adm["vfinish"]
+                ts.vlast = max(ts.vlast, job.vfinish)
+            st = d.get("settle")
+            if st is not None:
+                job.state = st["state"]
+                job.error = st.get("error")
+                job.finished_at = st["t"]
+                ts.spent_bytes += st.get("observed_bytes", 0)
+                ts.spent_wall_s += st.get("modeled_s", 0.0)
+                svc._vtime = max(svc._vtime, job.vfinish)
+                continue
+            # PENDING (admitted, never started) or RUNNING (crashed
+            # mid-stream): both re-enter the queue; the latter carries
+            # its fast-forward watermark
+            if job.estimate is not None:
+                ts.reserved_bytes += job.estimate.est_bytes
+                ts.reserved_wall_s += job.estimate.est_wall_s
+            job.state = PENDING
+            if d.get("start") is not None:
+                job.resume_skip = d["watermark"] + 1
+                svc._vtime = max(svc._vtime, job.vfinish)
+            if svc.tracing:
+                job.tracer = Tracer(clock=svc.clock, name=f"job-{jid}")
+                job.root_span = job.tracer.begin(
+                    f"job[{jid}]", kind="job", job_id=jid, tenant=job.tenant
+                )
+                job.tracer.add_span(
+                    "recover", kind="recover",
+                    t0=svc.clock.now(), t1=svc.clock.now(),
+                    parent=job.root_span,
+                    resume_skip=job.resume_skip,
+                )
+        svc._ids = itertools.count(max_id + 1)
+        svc._seq = itertools.count(max_seq + 1)
+        svc.journal = journal
+        return svc
 
     def queue_depth(self) -> int:
         return sum(

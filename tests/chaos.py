@@ -1,0 +1,216 @@
+"""Deterministic chaos harness (ISSUE 8 / DESIGN.md §14).
+
+One seed → one reproducible fault schedule → one run → one verdict.
+:func:`draw_schedule` expands a seed into a :class:`FaultSchedule`
+(which nodes fail / straggle / serve corrupt baskets, or where a
+journaled service crashes mid-stream), and :func:`run_chaos` executes
+it against a 3-shard replicated cluster (or a journaled service for
+crash-restart schedules) and asserts the tentpole invariant:
+
+  * every recovered result is **bit-identical** to the single-node
+    reference, and
+  * every degradation is **explicit** — a :class:`DegradedResult` whose
+    error manifest names exactly the missing windows — with the fault
+    ledger (retries, corrupt baskets, backoff) matching the schedule.
+
+Nothing here sleeps: straggles are modeled seconds, crashes are
+abandoned service objects, and the same seed replays the same schedule
+forever.  ``pytest -m chaos`` sweeps the seeds (tests/test_chaos.py).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.cluster import (
+    ClusterCoordinator,
+    DegradedResult,
+    RetryPolicy,
+    StorageNode,
+    partition_store,
+)
+from repro.serve import DONE, JobJournal, SkimService
+from tests.test_query import QUERY
+
+#: schedule kinds a seed can draw
+SCENARIOS = ("fail", "straggle", "corrupt", "mixed", "degraded", "crash")
+
+
+@dataclass
+class FaultSchedule:
+    """One seed's reproducible fault plan."""
+
+    seed: int
+    scenario: str
+    #: (node_index, kind, modeled delay_s) per injected fault
+    faults: list[tuple[int, str, float]] = field(default_factory=list)
+    #: crash scenario: windows streamed before each simulated crash
+    crash_points: list[int] = field(default_factory=list)
+
+    def describe(self) -> str:
+        parts = [f"seed={self.seed}", self.scenario]
+        parts += [f"node{n}:{k}" for n, k, _ in self.faults]
+        parts += [f"crash@{w}" for w in self.crash_points]
+        return " ".join(parts)
+
+
+def draw_schedule(seed: int, n_nodes: int = 3, n_windows: int = 5) -> FaultSchedule:
+    """Expand ``seed`` into a deterministic fault schedule."""
+    rng = random.Random(seed)
+    scenario = SCENARIOS[seed % len(SCENARIOS)]
+    sched = FaultSchedule(seed=seed, scenario=scenario)
+    if scenario == "crash":
+        # one or two crashes at strictly increasing window watermarks
+        first = rng.randrange(1, n_windows - 1)
+        sched.crash_points.append(first)
+        if rng.random() < 0.5 and first + 1 < n_windows:
+            sched.crash_points.append(rng.randrange(1, n_windows - first))
+        return sched
+    n_faults = rng.randrange(1, n_nodes)  # never every node
+    victims = rng.sample(range(n_nodes), n_faults)
+    for v in victims:
+        if scenario == "mixed":
+            kind = rng.choice(("fail", "straggle", "corrupt"))
+        elif scenario == "degraded":
+            kind = "fail"
+        else:
+            kind = scenario
+        delay = rng.uniform(10.0, 100.0) if kind == "straggle" else 0.0
+        sched.faults.append((v, kind, delay))
+    return sched
+
+
+def build_chaos_cluster(store, schedule: FaultSchedule, n_nodes: int = 3):
+    """A replicated (or, for degraded schedules, replica-less) cluster
+    with the schedule's faults armed.  Pruning and cascading are off so
+    every shard provably executes and every armed fault provably fires.
+    """
+    shards = partition_store(store, n_nodes)
+    replicated = schedule.scenario != "degraded"
+    nodes = [StorageNode(sh, prune=False, cascade=False) for sh in shards]
+    replicas = (
+        {
+            sh.shard_id: StorageNode(
+                sh, node_id=100 + sh.shard_id, prune=False, cascade=False
+            )
+            for sh in shards
+        }
+        if replicated
+        else {}
+    )
+    coord = ClusterCoordinator(
+        nodes,
+        replicas=replicas,
+        concurrency="serial",
+        basket_events=store.basket_events,
+        codec=store.codec,
+        prune=False,
+        retry_policy=RetryPolicy(seed=schedule.seed),
+        allow_partial=not replicated,
+    )
+    for node_idx, kind, delay in schedule.faults:
+        coord.nodes[node_idx].inject_fault(kind, delay_s=delay)
+    return coord
+
+
+def _assert_bit_identical(res, ref) -> None:
+    assert res.n_passed == ref.n_passed
+    assert res.n_input == ref.n_input
+    assert res.output.manifest_hash() == ref.output.manifest_hash()
+
+
+def _run_cluster_chaos(store, reference, schedule: FaultSchedule) -> dict:
+    coord = build_chaos_cluster(store, schedule)
+    res = coord.run(QUERY)
+    recoverable = [f for f in schedule.faults if f[1] in ("fail", "corrupt")]
+    n_corrupt = sum(1 for f in schedule.faults if f[1] == "corrupt")
+    if schedule.scenario == "degraded":
+        # no replicas: every failed shard is an EXPLICIT degradation
+        assert isinstance(res, DegradedResult)
+        failed = sorted(n for n, _, _ in schedule.faults)
+        assert sorted(e.shard_id for e in res.errors) == failed
+        expect_missing = sorted(
+            w
+            for n, _, _ in schedule.faults
+            for w in coord.nodes[n].shard.window_ids
+        )
+        assert res.extras["missing_windows"] == expect_missing
+        assert res.extras["degraded"] is True
+    else:
+        # replicas cover every fault: bit-identity, exact retry ledger
+        assert not res.degraded
+        _assert_bit_identical(res, reference)
+        assert len(res.retries) == len(recoverable)
+        assert {s for s, _, _ in res.retries} == {
+            n for n, _, _ in recoverable
+        }
+        assert res.extras["corrupt_baskets"] == n_corrupt
+        for node_idx, kind, _ in schedule.faults:
+            q = coord.nodes[node_idx].quarantine
+            assert (len(q) == 1) == (kind == "corrupt")
+    return {
+        "schedule": schedule.describe(),
+        "degraded": bool(res.degraded),
+        "retries": len(res.retries),
+        "corrupt_baskets": res.extras.get("corrupt_baskets", 0),
+    }
+
+
+def _run_crash_chaos(store, schedule: FaultSchedule) -> dict:
+    query = QUERY
+    # uninterrupted journaled reference
+    ref_svc = SkimService(store, journal=JobJournal())
+    ref_job = ref_svc.submit(query, tenant="chaos")
+    ref_svc.result(ref_job.job_id)
+
+    journal = JobJournal()
+    svc = SkimService(store, journal=journal)
+    job = svc.submit(query, tenant="chaos")
+    streamed = 0
+    for point in schedule.crash_points:
+        streamed += point
+        while len(job.partials) < point:
+            assert svc.step(), "service stalled before the crash point"
+        # crash: abandon the service, recover a fresh one off the journal
+        svc = SkimService.recover(journal, store)
+        job = svc.jobs[job.job_id]
+        assert job.resume_skip == streamed
+    done = svc.result(job.job_id)
+    assert done.state == DONE
+    # post-recovery stream == the uninterrupted run's suffix
+    assert done.windows_streamed() == ref_job.windows_streamed()[streamed:]
+    assert [p.n_passed for p in done.partials] == [
+        p.n_passed for p in ref_job.partials[streamed:]
+    ]
+    assert (
+        done.result.output.manifest_hash()
+        == ref_job.result.output.manifest_hash()
+    )
+    return {
+        "schedule": schedule.describe(),
+        "crashes": len(schedule.crash_points),
+        "resumed_from": streamed,
+    }
+
+
+def run_chaos(store, reference, seed: int) -> dict:
+    """Run one seed's schedule end-to-end; returns a ledger summary.
+
+    Raises (AssertionError) on any silent corruption, missing ledger
+    entry, or undeclared degradation — the chaos sweep's only passing
+    outcomes are bit-identity and *explicit* degradation.
+    """
+    schedule = draw_schedule(seed)
+    if schedule.scenario == "crash":
+        return _run_crash_chaos(store, schedule)
+    return _run_cluster_chaos(store, reference, schedule)
+
+
+__all__ = [
+    "SCENARIOS",
+    "FaultSchedule",
+    "build_chaos_cluster",
+    "draw_schedule",
+    "run_chaos",
+]

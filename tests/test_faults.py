@@ -1,0 +1,558 @@
+"""Fault-tolerance layer (ISSUE 8 / DESIGN.md §14).
+
+Pins the tentpole invariant: every recovered result is bit-identical to
+the single-node reference, and every degradation is explicit and
+ledgered.  Covers the data layer's basket integrity digests, the
+cluster's retry/hedge policies, explicit degradation manifests, the
+serial-mode modeled deadline, gather-thread leak semantics, and the
+prefetcher's cancellation-under-fault contract.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterCoordinator,
+    ClusterError,
+    DegradedResult,
+    HedgePolicy,
+    IntegrityError,
+    NodeTimeout,
+    RetryPolicy,
+    SkimResultCache,
+    StorageNode,
+    classify_fault,
+    partition_store,
+)
+from repro.cluster.node import NodeFailure
+from repro.core.engine import run_skim
+from repro.data.codecs import basket_digest
+from repro.data.store import (
+    INTEGRITY_VERSION,
+    BasketMeta,
+    CorruptBasket,
+    EventStore,
+    FetchStats,
+    WindowPrefetcher,
+)
+from repro.data.synth import make_nanoaod_like
+from repro.obs.metrics import MetricsRegistry
+from tests.test_query import QUERY
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_nanoaod_like(10_000, n_hlt=16, n_filler=8, basket_events=2048)
+
+
+@pytest.fixture(scope="module")
+def reference(store):
+    return run_skim(store, QUERY, mode="near_data")
+
+
+@pytest.fixture(scope="module")
+def shards3(store):
+    return partition_store(store, 3)
+
+
+def _coord(
+    shards,
+    store,
+    cache=None,
+    replication=True,
+    concurrency="serial",
+    prune=True,
+    cascade=True,
+    **kw,
+):
+    nodes = [StorageNode(sh, prune=prune, cascade=cascade) for sh in shards]
+    replicas = (
+        {
+            sh.shard_id: StorageNode(
+                sh, node_id=100 + sh.shard_id, prune=prune, cascade=cascade
+            )
+            for sh in shards
+        }
+        if replication
+        else {}
+    )
+    return ClusterCoordinator(
+        nodes,
+        replicas=replicas,
+        cache=cache,
+        concurrency=concurrency,
+        basket_events=store.basket_events,
+        codec=store.codec,
+        prune=prune,
+        **kw,
+    )
+
+
+def _assert_same_output(res, ref):
+    assert res.n_passed == ref.n_passed
+    assert res.n_input == ref.n_input
+    assert res.output.compressed_bytes() == ref.output.compressed_bytes()
+    for name in ref.output.branch_names():
+        br = ref.output.branches[name]
+        if br.jagged:
+            v0, c0 = ref.output.read_jagged(name)
+            v1, c1 = res.output.read_jagged(name)
+            np.testing.assert_array_equal(c1, c0)
+            np.testing.assert_array_equal(v1, v0)
+        else:
+            np.testing.assert_array_equal(
+                res.output.read_flat(name), ref.output.read_flat(name)
+            )
+
+
+# ---------------------------------------------------------------------------
+# data layer: basket integrity digests
+# ---------------------------------------------------------------------------
+
+
+def test_basket_digest_deterministic_and_sensitive():
+    blob = b"\x01\x02\x03\x04" * 100
+    d = basket_digest(blob)
+    assert isinstance(d, int) and 0 <= d <= 0xFFFFFFFF
+    assert basket_digest(blob) == d
+    flipped = bytes([blob[0] ^ 0xFF]) + blob[1:]
+    assert basket_digest(flipped) != d
+
+
+def test_every_basket_meta_carries_matching_digest(store):
+    assert INTEGRITY_VERSION >= 1
+    for name in store.branch_names():
+        for i, meta in enumerate(store._baskets[name]):
+            blob = store._blobs[name][i]
+            assert meta.digest == basket_digest(blob)
+
+
+def test_corrupt_fetch_raises_typed_error():
+    small = make_nanoaod_like(2_000, n_hlt=4, n_filler=2, basket_events=512)
+    restore = small.corrupt_blob("MET_pt", 1)
+    with pytest.raises(CorruptBasket) as ei:
+        small.read_flat("MET_pt")
+    exc = ei.value
+    assert exc.branch == "MET_pt"
+    assert exc.basket_id == 1
+    assert exc.expected != exc.actual
+    assert classify_fault(exc) == "corrupt"
+    restore()  # transient read-path corruption: clean bytes come back
+    assert len(small.read_flat("MET_pt")) == 2_000
+
+
+def test_verify_off_restores_unchecked_fast_path():
+    small = make_nanoaod_like(1_000, n_hlt=4, n_filler=2, basket_events=512)
+    small.verify = False
+    restore = small.corrupt_blob("run", 0)
+    # no digest check: the corrupt blob decodes to garbage, silently
+    small.fetch_basket("run", 0)
+    restore()
+
+
+def test_legacy_meta_without_digest_degrades_to_skip():
+    """A store written before INTEGRITY_VERSION has no digests; the
+    check degrades to a no-op — never to a false alarm."""
+    small = make_nanoaod_like(1_000, n_hlt=4, n_filler=2, basket_events=512)
+    meta = small._baskets["MET_pt"][0]
+    legacy_row = meta.stats_row()[:8]  # pre-digest 8-element row
+    legacy = BasketMeta(*legacy_row)
+    assert legacy.digest is None
+    small._baskets["MET_pt"][0] = legacy
+    restore = small.corrupt_blob("MET_pt", 0)
+    small.fetch_basket("MET_pt", 0)  # unverifiable: no raise
+    restore()
+
+
+def test_save_load_roundtrips_digests(tmp_path):
+    small = make_nanoaod_like(1_000, n_hlt=4, n_filler=2, basket_events=512)
+    path = str(tmp_path / "t.skim")
+    small.save(path)
+    loaded = EventStore.load(path)
+    for name in small.branch_names():
+        for m0, m1 in zip(small._baskets[name], loaded._baskets[name]):
+            assert m1.digest == m0.digest is not None
+    # loaded stores verify too
+    restore = loaded.corrupt_blob("MET_pt", 0)
+    with pytest.raises(CorruptBasket):
+        loaded.fetch_basket("MET_pt", 0)
+    restore()
+
+
+# ---------------------------------------------------------------------------
+# retry + hedge policies
+# ---------------------------------------------------------------------------
+
+
+def test_retry_backoff_deterministic_exponential_capped():
+    p = RetryPolicy(budget=4, base_delay_s=0.1, multiplier=2.0,
+                    max_delay_s=0.5, jitter=0.0)
+    assert p.backoff_s(1) == pytest.approx(0.1)
+    assert p.backoff_s(2) == pytest.approx(0.2)
+    assert p.backoff_s(3) == pytest.approx(0.4)
+    assert p.backoff_s(4) == pytest.approx(0.5)  # capped
+    j = RetryPolicy(jitter=0.1, seed=7)
+    assert j.backoff_s(1, shard_id=3) == j.backoff_s(1, shard_id=3)
+    assert j.backoff_s(1, shard_id=3) != j.backoff_s(1, shard_id=4)
+    lo, hi = 0.05 * 0.9, 0.05 * 1.1
+    assert lo <= j.backoff_s(1, shard_id=3) <= hi
+
+
+def test_retry_targets_cover_every_configuration():
+    p, r = object(), object()
+    assert RetryPolicy(budget=1).targets(p, r) == [r]
+    assert RetryPolicy(budget=3).targets(p, r) == [r, r, r]
+    assert RetryPolicy(budget=3, retry_primary=True).targets(p, r) == [r, p, r]
+    assert RetryPolicy(budget=2).targets(p, None) == []
+    assert RetryPolicy(budget=2, retry_primary=True).targets(p, None) == [p, p]
+    assert RetryPolicy(budget=0).targets(p, r) == []
+
+
+def test_hedge_delay_fixed_and_quantile():
+    assert HedgePolicy(delay_s=0.25).delay([9.0, 9.0]) == 0.25
+    h = HedgePolicy(quantile=0.5, multiplier=2.0, min_delay_s=0.01,
+                    min_samples=2)
+    assert h.delay([]) == 0.01  # cold start: floor
+    assert h.delay([1.0, 2.0, 3.0]) == pytest.approx(4.0)  # 2 x median-ish
+
+
+def test_classify_fault_taxonomy():
+    assert classify_fault(CorruptBasket("b", 0, 1, 2)) == "corrupt"
+    assert classify_fault(NodeTimeout("slow")) == "timeout"
+    assert classify_fault(NodeFailure("down")) == "fail"
+    assert classify_fault(RuntimeError("other")) == "fail"
+
+
+# ---------------------------------------------------------------------------
+# cluster: corrupt-basket recovery + quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_basket_retries_on_replica(store, shards3, reference):
+    metrics = MetricsRegistry()
+    coord = _coord(
+        shards3, store, prune=False, cascade=False, metrics=metrics
+    )
+    coord.nodes[1].inject_fault("corrupt")
+    res = coord.run(QUERY)
+    _assert_same_output(res, reference)
+    assert res.retries == [(1, coord.nodes[1].node_id, 101)]
+    # the incident is quarantined on the node that read the bad bytes
+    assert len(coord.nodes[1].quarantine) == 1
+    ((sid, branch, basket),) = coord.nodes[1].quarantine
+    assert sid == 1 and basket == 0
+    assert res.extras["corrupt_baskets"] == 1
+    assert res.extras["retry_attempts"] == 1
+    assert res.extras["retry_backoff_s"] > 0
+    assert metrics.counter("cluster_corrupt_baskets_total") == 1
+    assert metrics.counter("cluster_retries_total", error="corrupt") == 1
+
+
+def test_corrupt_without_replica_is_terminal(store, shards3):
+    coord = _coord(shards3, store, replication=False, prune=False,
+                   cascade=False)
+    coord.nodes[0].inject_fault("corrupt")
+    with pytest.raises(ClusterError, match="corrupt.*no replica"):
+        coord.run(QUERY)
+    assert len(coord.nodes[0].quarantine) == 1
+
+
+def test_retry_budget_exhaustion_message(store, shards3):
+    coord = _coord(shards3, store, retry_policy=RetryPolicy(budget=2))
+    coord.nodes[1].inject_fault("fail", n=3)  # primary + both re-issues
+    coord.replicas[1].inject_fault("fail", n=2)
+    with pytest.raises(ClusterError, match="both failed.*budget 2"):
+        coord.run(QUERY)
+
+
+# ---------------------------------------------------------------------------
+# cluster: modeled hedging
+# ---------------------------------------------------------------------------
+
+
+def _clean_max_modeled(shards, store):
+    clean = _coord(shards, store, replication=False).run(QUERY)
+    return max(r.modeled_s for r in clean.responses)
+
+
+def test_hedge_beats_modeled_straggler(store, shards3, reference):
+    base = _clean_max_modeled(shards3, store)
+    delay = base * 1.5
+    straggle = base * 10 + 5.0
+    metrics = MetricsRegistry()
+    unhedged = _coord(shards3, store)
+    unhedged.nodes[1].inject_fault("straggle", delay_s=straggle)
+    slow = unhedged.run(QUERY)
+    assert slow.modeled_total_s > straggle
+
+    hedged = _coord(
+        shards3, store,
+        hedge=HedgePolicy(delay_s=delay), metrics=metrics,
+    )
+    hedged.nodes[1].inject_fault("straggle", delay_s=straggle)
+    res = hedged.run(QUERY)
+    _assert_same_output(res, reference)
+    assert res.extras["hedges_won"] == 1
+    assert res.extras["hedges_lost"] == 0
+    # the winning response finishes the modeled race at delay + replica
+    assert res.modeled_total_s < slow.modeled_total_s
+    assert metrics.counter("cluster_hedges_total", outcome="won") == 1
+
+
+def test_hedge_losses_keep_primary_bit_identical(store, shards3, reference):
+    # delay 0: every shard hedges; equal modeled times mean the replica
+    # (at delay + modeled) never strictly wins
+    coord = _coord(shards3, store, hedge=HedgePolicy(delay_s=0.0))
+    res = coord.run(QUERY)
+    _assert_same_output(res, reference)
+    assert res.extras["hedges_won"] == 0
+    assert res.extras["hedges_lost"] == len(
+        [r for r in res.responses if not r.pruned]
+    )
+
+
+def test_hedge_mismatch_raises_integrity_error(store, shards3):
+    base = _clean_max_modeled(shards3, store)
+    coord = _coord(shards3, store, hedge=HedgePolicy(delay_s=base * 1.5))
+    coord.nodes[1].inject_fault("straggle", delay_s=base * 10 + 5.0)
+    replica = coord.replicas[1]
+    real = replica.execute
+
+    def lying(query):
+        resp = real(query)
+        resp.result.n_passed += 1  # disagree bit-for-bit
+        return resp
+
+    replica.execute = lying
+    with pytest.raises(IntegrityError, match="shard 1.*refusing to pick"):
+        coord.run(QUERY)
+
+
+def test_hedge_fault_is_cancelled_not_fatal(store, shards3, reference):
+    base = _clean_max_modeled(shards3, store)
+    coord = _coord(shards3, store, hedge=HedgePolicy(delay_s=base * 1.5))
+    coord.nodes[1].inject_fault("straggle", delay_s=base * 10 + 5.0)
+    coord.replicas[1].inject_fault("fail")
+    res = coord.run(QUERY)
+    _assert_same_output(res, reference)  # primary's answer stands
+    assert res.extras["hedges_cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# cluster: explicit degradation
+# ---------------------------------------------------------------------------
+
+
+def test_partial_results_refused_by_default(store, shards3):
+    coord = _coord(shards3, store, replication=False)
+    coord.nodes[1].inject_fault("fail")
+    with pytest.raises(ClusterError, match="no replica"):
+        coord.run(QUERY)
+
+
+def test_allow_partial_yields_exact_degradation_manifest(store, shards3):
+    metrics = MetricsRegistry()
+    coord = _coord(shards3, store, replication=False, metrics=metrics)
+    coord.nodes[1].inject_fault("fail")
+    res = coord.run(QUERY, allow_partial=True)
+    assert isinstance(res, DegradedResult)
+    assert res.degraded and res.extras["degraded"]
+    (err,) = res.errors
+    assert err.shard_id == 1
+    assert err.kind == "fail"
+    assert err.window_ids == list(coord.nodes[1].shard.window_ids)
+    assert res.extras["missing_windows"] == sorted(err.window_ids)
+    assert err.missing_events == sum(b - a for a, b in err.spans)
+    assert metrics.counter("cluster_degraded_shards_total", error="fail") == 1
+
+    # every SURVIVING window is bit-identical to the single-node
+    # reference restricted to the surviving spans
+    surviving = sorted(
+        (w * n.shard.window_events,
+         min(w * n.shard.window_events + n.shard.window_events,
+             store.n_events))
+        for n in (coord.nodes[0], coord.nodes[2])
+        for w in n.shard.window_ids
+    )
+    sub = store.slice_events(surviving)
+    ref = run_skim(sub, QUERY, mode="near_data")
+    assert res.n_passed == ref.n_passed
+    assert res.n_input == ref.n_input
+    for name in ref.output.branch_names():
+        if ref.output.branches[name].jagged:
+            v0, c0 = ref.output.read_jagged(name)
+            v1, c1 = res.output.read_jagged(name)
+            np.testing.assert_array_equal(c1, c0)
+            np.testing.assert_array_equal(v1, v0)
+        else:
+            np.testing.assert_array_equal(
+                res.output.read_flat(name), ref.output.read_flat(name)
+            )
+
+
+def test_all_shards_failed_raises_even_with_allow_partial(store, shards3):
+    coord = _coord(shards3, store, replication=False, prune=False,
+                   cascade=False)
+    for node in coord.nodes:
+        node.inject_fault("fail")
+    with pytest.raises(ClusterError, match="every shard failed"):
+        coord.run(QUERY, allow_partial=True)
+
+
+def test_degraded_results_never_poison_the_cache(store, shards3, reference):
+    cache = SkimResultCache(budget_bytes=1 << 30)
+    coord = _coord(shards3, store, cache=cache)
+    coord.replicas.pop(1)  # shard 1 has no cover
+    coord.nodes[1].inject_fault("fail")
+    res = coord.run(QUERY, allow_partial=True)
+    assert res.degraded
+    # healed: the failed shard re-executes (nothing stale cached for it)
+    res2 = coord.run(QUERY)
+    assert not res2.degraded
+    _assert_same_output(res2, reference)
+
+
+def test_integrity_error_not_swallowed_by_allow_partial(store, shards3):
+    base = _clean_max_modeled(shards3, store)
+    coord = _coord(shards3, store, hedge=HedgePolicy(delay_s=base * 1.5),
+                   allow_partial=True)
+    coord.nodes[1].inject_fault("straggle", delay_s=base * 10 + 5.0)
+    replica = coord.replicas[1]
+    real = replica.execute
+
+    def lying(query):
+        resp = real(query)
+        resp.result.n_passed += 1
+        return resp
+
+    replica.execute = lying
+    with pytest.raises(IntegrityError):
+        coord.run(QUERY)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: serial mode enforces the modeled deadline
+# ---------------------------------------------------------------------------
+
+
+def test_serial_mode_enforces_modeled_deadline(store, shards3):
+    """``shard_timeout_s`` used to be silently ignored in serial mode;
+    it is now enforced against the modeled clock."""
+    coord = _coord(shards3, store, replication=False, shard_timeout_s=5.0)
+    coord.nodes[1].inject_fault("straggle", delay_s=60.0)
+    with pytest.raises(NodeTimeout, match="shard 1.*deadline.*no replica"):
+        coord.run(QUERY)
+
+
+def test_serial_modeled_timeout_falls_back_to_replica(
+    store, shards3, reference
+):
+    coord = _coord(shards3, store, shard_timeout_s=5.0)
+    coord.nodes[1].inject_fault("straggle", delay_s=60.0)
+    res = coord.run(QUERY)
+    _assert_same_output(res, reference)
+    assert res.retries == [(1, coord.nodes[1].node_id, 101)]
+
+
+def test_serial_deadline_ignores_fast_shards(store, shards3, reference):
+    coord = _coord(shards3, store, replication=False, shard_timeout_s=1e9)
+    _assert_same_output(coord.run(QUERY), reference)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: gather-thread leak semantics
+# ---------------------------------------------------------------------------
+
+
+def _hang_node(node):
+    release = threading.Event()
+    orig = node.execute
+
+    def blocked(query):
+        release.wait()
+        return orig(query)
+
+    node.execute = blocked
+    return release
+
+
+def test_leaked_gather_thread_named_and_subsequent_query_clean(
+    store, shards3, reference
+):
+    """A timed-out worker leaks by design (see NodeTimeout docstring);
+    it must be identifiable by name and must not affect the next query
+    on the same coordinator."""
+    coord = _coord(shards3, store, concurrency="threads",
+                   shard_timeout_s=0.2)
+    release = _hang_node(coord.nodes[1])
+    try:
+        res = coord.run(QUERY)
+        _assert_same_output(res, reference)
+        leaked = [
+            t for t in threading.enumerate()
+            if t.name.startswith("skim-gather") and t.is_alive()
+        ]
+        assert leaked, "hung worker should still be parked, identifiable"
+        # a fresh pool per gather: the same coordinator serves the next
+        # query without inheriting the hung worker
+        res2 = coord.run(QUERY)
+        _assert_same_output(res2, reference)
+    finally:
+        release.set()
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: prefetcher cancellation under fault
+# ---------------------------------------------------------------------------
+
+
+def _no_prefetch_threads():
+    return not any(
+        t.name.startswith("skim-prefetch") and t.is_alive()
+        for t in threading.enumerate()
+    )
+
+
+def test_prefetcher_worker_fault_joins_cleanly():
+    started = []
+
+    def load(start, stop):
+        started.append(start)
+        if start == 40:
+            raise ValueError("injected decode fault")
+        return FetchStats(bytes_fetched=stop - start)
+
+    pf = WindowPrefetcher(100, 20, load, depth=2)
+    consumed = []
+    with pytest.raises(ValueError, match="injected decode fault"):
+        for start, stop, payload in pf:
+            consumed.append((start, payload.bytes_fetched))
+    # the fault surfaced at the faulting window; later windows were
+    # never yielded, and the pool joined (no deadlock, no zombie)
+    assert [s for s, _ in consumed] == [0, 20]
+    assert _no_prefetch_threads()
+    # each started window started exactly once: nothing double-runs
+    assert len(started) == len(set(started))
+
+
+def test_prefetcher_close_mid_stream_no_double_accounting():
+    loads = []
+
+    def load(start, stop):
+        loads.append(start)
+        return FetchStats(bytes_fetched=stop - start)
+
+    pf = WindowPrefetcher(100, 20, load, depth=2)
+    merged = FetchStats()
+    gen = iter(pf)
+    start, stop, payload = next(gen)
+    merged.merge(payload)
+    gen.close()  # cancellation point: service-layer close during fault
+    assert _no_prefetch_threads()
+    # only the yielded window reached the consumer ledger; speculative
+    # loads beyond it were dropped, not merged — no double accounting
+    assert merged.bytes_fetched == 20
+    assert len(loads) == len(set(loads))
+    assert len(loads) <= 3  # at most depth+1 speculative starts

@@ -1,0 +1,265 @@
+"""Durable jobs: journal + crash recovery (ISSUE 8 / DESIGN.md §14).
+
+Pins the write-ahead contract: every lifecycle transition is journaled
+before the service moves on, and :meth:`SkimService.recover` replays a
+journal into a fresh service whose post-recovery stream is exactly the
+uninterrupted run's suffix — bit-identical final result, tenant
+accounting intact, and recovery composing across repeated crashes.
+"""
+
+import pytest
+
+from repro.core.engine import run_skim
+from repro.data.synth import make_nanoaod_like
+from repro.obs.metrics import MetricsRegistry
+from repro.serve import (
+    DONE,
+    PENDING,
+    REJECTED,
+    JOURNAL_EVENTS,
+    JOURNAL_VERSION,
+    JobJournal,
+    SkimService,
+    TenantQuota,
+)
+from tests.test_query import QUERY
+
+N_EVENTS = 10_000
+BASKET = 2048
+N_WINDOWS = 5  # ceil(N_EVENTS / BASKET)
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_nanoaod_like(
+        N_EVENTS, n_hlt=16, n_filler=8, basket_events=BASKET
+    )
+
+
+@pytest.fixture(scope="module")
+def ref(store):
+    return run_skim(store, QUERY, mode="near_data")
+
+
+@pytest.fixture(scope="module")
+def uninterrupted(store):
+    """The reference journaled run: completes without a crash."""
+    svc = SkimService(store, journal=JobJournal())
+    job = svc.submit(QUERY, tenant="t")
+    svc.result(job.job_id)
+    return job
+
+
+# ---------------------------------------------------------------------------
+# JobJournal unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_journal_validates_events():
+    j = JobJournal()
+    rec = j.append("submit", 1, 0.0, tenant="t")
+    assert rec["v"] == JOURNAL_VERSION
+    with pytest.raises(ValueError, match="unknown journal event"):
+        j.append("explode", 1, 0.0)
+    assert set(JOURNAL_EVENTS) == {
+        "submit", "admit", "reject", "start", "window", "settle"
+    }
+
+
+def test_journal_rejects_non_jsonable_records():
+    j = JobJournal()
+    with pytest.raises(TypeError, match="dict/str docs"):
+        j.append("submit", 1, 0.0, query=object())
+    assert len(j) == 1 - 1  # nothing half-appended
+
+
+def test_journal_records_filter_and_len():
+    j = JobJournal()
+    j.append("submit", 1, 0.0)
+    j.append("window", 1, 1.0, seq=0)
+    j.append("window", 1, 2.0, seq=1)
+    assert len(j) == 3
+    assert [r["seq"] for r in j.records("window")] == [0, 1]
+    assert [r["event"] for r in j.records()] == ["submit", "window", "window"]
+
+
+def test_journal_persists_and_reopens(tmp_path):
+    path = str(tmp_path / "jobs.journal")
+    j = JobJournal(path)
+    j.append("submit", 1, 0.0, tenant="t", query="q")
+    j.append("settle", 1, 1.0, state=DONE)
+    j.close()
+    reopened = JobJournal(path)
+    assert len(reopened) == 2
+    assert reopened.records() == j.records()
+    # append-only: reopening appends after the existing records
+    reopened.append("submit", 2, 2.0)
+    assert len(JobJournal(path)) == 3
+
+
+def test_service_requires_jsonable_query_docs(store):
+    from repro.core.query import parse_query
+
+    svc = SkimService(store, journal=JobJournal())
+    with pytest.raises(TypeError, match="dict/str docs"):
+        svc.submit(parse_query(QUERY))  # Query object: no serializer
+
+
+# ---------------------------------------------------------------------------
+# journaled lifecycle coverage
+# ---------------------------------------------------------------------------
+
+
+def test_every_transition_journaled(uninterrupted, store):
+    svc = SkimService(store, journal=JobJournal())
+    job = svc.submit(QUERY, tenant="t")
+    svc.result(job.job_id)
+    j = svc.journal
+    assert [r["event"] for r in j.records()] == (
+        ["submit", "admit", "start"]
+        + ["window"] * N_WINDOWS
+        + ["settle"]
+    )
+    assert [r["seq"] for r in j.records("window")] == list(range(N_WINDOWS))
+    (settle,) = j.records("settle")
+    assert settle["state"] == DONE
+    assert settle["observed_bytes"] == job.result.stats.bytes_fetched
+
+
+def test_rejections_are_journaled(store):
+    svc = SkimService(
+        store,
+        quotas={"t": TenantQuota(byte_budget=1)},
+        journal=JobJournal(),
+    )
+    job = svc.submit(QUERY, tenant="t")
+    assert job.state == REJECTED
+    (rej,) = svc.journal.records("reject")
+    assert "over byte quota" in rej["reason"]
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+
+def _crash_after(store, path, n_windows, quotas=None, **kw):
+    """Run a journaled service until ``n_windows`` partials streamed,
+    then abandon it (the simulated crash: nothing is settled)."""
+    svc = SkimService(
+        store, journal=JobJournal(path), quotas=quotas or {}, **kw
+    )
+    job = svc.submit(QUERY, tenant="t")
+    while len(job.partials) < n_windows:
+        assert svc.step()
+    svc.journal.close()
+    return job
+
+
+def test_recover_resumes_running_job_from_watermark(
+    store, tmp_path, uninterrupted
+):
+    path = str(tmp_path / "crash.journal")
+    crashed = _crash_after(store, path, 2)
+    assert crashed.state != DONE
+
+    svc2 = SkimService.recover(JobJournal(path), store)
+    job2 = svc2.jobs[crashed.job_id]
+    assert job2.state == PENDING
+    assert job2.resume_skip == 2
+    done = svc2.result(job2.job_id)
+    assert done.state == DONE
+    # the post-recovery stream is exactly the uninterrupted suffix
+    assert done.windows_streamed() == uninterrupted.windows_streamed()[2:]
+    assert [p.n_passed for p in done.partials] == [
+        p.n_passed for p in uninterrupted.partials[2:]
+    ]
+    # and the final result is bit-identical to the no-crash run
+    assert (
+        done.result.output.manifest_hash()
+        == uninterrupted.result.output.manifest_hash()
+    )
+
+
+def test_recovery_composes_across_repeated_crashes(
+    store, tmp_path, uninterrupted
+):
+    path = str(tmp_path / "crash2.journal")
+    crashed = _crash_after(store, path, 1)
+
+    # crash again mid-resume: one more window streamed, then abandoned
+    svc2 = SkimService.recover(JobJournal(path), store)
+    job2 = svc2.jobs[crashed.job_id]
+    while len(job2.partials) < 1:
+        assert svc2.step()
+    svc2.journal.close()
+
+    # second recovery: the watermark is GLOBAL (resume_skip + local seq),
+    # so the third incarnation skips both previously streamed windows
+    svc3 = SkimService.recover(JobJournal(path), store)
+    job3 = svc3.jobs[crashed.job_id]
+    assert job3.resume_skip == 2
+    done = svc3.result(job3.job_id)
+    assert done.state == DONE
+    assert done.windows_streamed() == uninterrupted.windows_streamed()[2:]
+    assert (
+        done.result.output.manifest_hash()
+        == uninterrupted.result.output.manifest_hash()
+    )
+
+
+def test_recover_restores_pending_and_terminal_jobs(store, tmp_path):
+    path = str(tmp_path / "mixed.journal")
+    quotas = {"t": TenantQuota(byte_budget=10**12)}
+    svc = SkimService(store, journal=JobJournal(path), quotas=quotas)
+    done_job = svc.submit(QUERY, tenant="t")
+    svc.result(done_job.job_id)
+    rejected = svc.submit(
+        QUERY, tenant="broke"
+    )  # fine: unlimited default quota
+    pending = svc.submit(QUERY, tenant="t")
+    assert pending.state == PENDING
+    usage_before = svc.tenant_usage("t")
+    svc.journal.close()
+
+    svc2 = SkimService.recover(JobJournal(path), store, quotas=quotas)
+    assert svc2.jobs[done_job.job_id].state == DONE
+    assert svc2.jobs[rejected.job_id].state == rejected.state
+    j2 = svc2.jobs[pending.job_id]
+    assert j2.state == PENDING and j2.resume_skip == 0
+    assert j2.vfinish == pending.vfinish
+    # tenant accounting (spent + reserved) survives the crash
+    usage_after = svc2.tenant_usage("t")
+    for k in ("spent_bytes", "spent_wall_s", "reserved_bytes",
+              "reserved_wall_s"):
+        assert usage_after[k] == pytest.approx(usage_before[k]), k
+    # and the queue drains to the same answer
+    assert svc2.result(pending.job_id).state == DONE
+
+
+def test_recovered_service_continues_ids_and_keeps_journaling(
+    store, tmp_path
+):
+    path = str(tmp_path / "ids.journal")
+    crashed = _crash_after(store, path, 1)
+    svc2 = SkimService.recover(JobJournal(path), store)
+    newer = svc2.submit(QUERY, tenant="u")
+    assert newer.job_id == crashed.job_id + 1
+    assert newer.seq == crashed.seq + 1
+    # the recovered service journals to the same journal
+    assert svc2.journal.records("submit")[-1]["job_id"] == newer.job_id
+
+
+def test_recover_counts_replays_and_traces(store, tmp_path):
+    path = str(tmp_path / "obs.journal")
+    _crash_after(store, path, 2)
+    metrics = MetricsRegistry()
+    svc2 = SkimService.recover(
+        JobJournal(path), store, metrics=metrics, tracing=True
+    )
+    assert metrics.counter("journal_replays_total", event="submit") == 1
+    assert metrics.counter("journal_replays_total", event="window") == 2
+    (job,) = svc2.jobs.values()
+    spans = [s for s in job.tracer.spans() if s.kind == "recover"]
+    assert len(spans) == 1
+    assert spans[0].attrs["resume_skip"] == 2

@@ -314,13 +314,16 @@ def test_manifest_hash_changes_when_stats_change(store):
 def test_manifest_carries_stats_and_version(store):
     doc = store.manifest()
     assert doc["zonemap_version"] >= 1
+    assert doc["integrity_version"] >= 1
     rows = doc["baskets"]["MET_pt"]
-    assert all(len(r) == 8 for r in rows)
+    assert all(len(r) == 9 for r in rows)
     vmin, vmax = rows[0][5], rows[0][6]
     assert vmin is not None and vmax is not None and vmin <= vmax
     # bool branches carry true-counts
     hlt = doc["baskets"]["HLT_IsoMu24"]
     assert all(isinstance(r[7], int) for r in hlt)
+    # every basket row carries its CRC-32 integrity digest
+    assert all(isinstance(r[8], int) for r in rows)
 
 
 def test_save_load_roundtrip_preserves_stats(store, tmp_path):
