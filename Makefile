@@ -21,6 +21,7 @@ chaos:  ## seeded fault-injection sweep (tests/test_chaos.py)
 
 lint:  ## style/correctness lint (pip install -r requirements-dev.txt)
 	ruff check src tests benchmarks examples tools
+	$(PY) -m tools.skimlint src/repro --self-test --verify-fixtures
 	$(PY) tools/check_extras.py
 
 quickstart:

@@ -24,7 +24,8 @@ QUERY = {
     "branches": [
         "Electron_*", "Muon_*", "Jet_*", "MET_*", "HLT_*",
         "PV_npvs", "run", "event", "luminosityBlock",
-    ] + [f"Filler_{i:03d}" for i in range(60)],
+        *(f"Filler_{i:03d}" for i in range(60)),
+    ],
     "selection": {
         "preselection": [{"branch": "nElectron", "op": ">=", "value": 1}],
         "object": [

@@ -50,7 +50,7 @@ def main() -> None:
 
     print(f"{'mode':<14}", end="")
     for gbps in (1, 10, 100):
-        print(f"{str(gbps)+' Gb/s':>12}", end="")
+        print(f"{gbps} Gb/s".rjust(12), end="")
     print(f"{'busy%':>8}")
 
     for mode in MODES:

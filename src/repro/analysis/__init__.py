@@ -1,0 +1,28 @@
+"""Static analysis of compiled artifacts (DESIGN.md §15).
+
+``repro.analysis.verify`` proves invariants of compiled Programs and
+SkimPlans *before anything runs* — the verifier half of the skimlint
+suite (``tools/skimlint`` owns the source-level lint half).
+"""
+
+from repro.analysis.verify import (
+    VerifyError,
+    maybe_verify_plan,
+    maybe_verify_program,
+    program_reads,
+    verify_cache_key_coverage,
+    verify_enabled,
+    verify_plan,
+    verify_program,
+)
+
+__all__ = [
+    "VerifyError",
+    "maybe_verify_plan",
+    "maybe_verify_program",
+    "program_reads",
+    "verify_cache_key_coverage",
+    "verify_enabled",
+    "verify_plan",
+    "verify_program",
+]

@@ -102,7 +102,8 @@ def canonical_query(query: Query | dict | str) -> str:
         "cascade": q.cascade,
         "stages": {
             name: sorted(
-                (_node_doc(n) for n in stage), key=lambda d: json.dumps(d)
+                (_node_doc(n) for n in stage),
+                key=lambda d: json.dumps(d, sort_keys=True),
             )
             for name, stage in q.stages()
         },

@@ -584,8 +584,12 @@ class ClusterCoordinator:
                 f"shard {sid}: hedged replica {replica.node_id} disagrees "
                 f"with node {resp.node_id} bit-for-bit — refusing to pick"
             )
+        # the guard keeps the race deterministic: modeled times carry
+        # measured components that jitter run-to-run, and switching
+        # between bit-identical responses on sub-jitter margins would
+        # make the ledger (and modeled_total_s) nondeterministic
         effective = delay + hresp.modeled_s
-        if effective < resp.modeled_s:
+        if effective < resp.modeled_s * (1.0 - self.hedge.jitter_guard):
             g.hedges.append((sid, "won"))
             self._inc("cluster_hedges_total", outcome="won")
             return replace(hresp, modeled_s=effective)
@@ -1003,7 +1007,7 @@ class ClusterCoordinator:
 
         cached_responses: dict[int, list[NodeResponse]] = {}
         if self.cache is not None:
-            for ti, (q, qh) in enumerate(compiled):
+            for ti, (_q, qh) in enumerate(compiled):
                 keys = [
                     versioned_key(qh, node.shard.manifest_hash)
                     for node in self.nodes
@@ -1051,7 +1055,9 @@ class ClusterCoordinator:
                         current = nxt
 
             if self.concurrency == "threads":
-                with ThreadPoolExecutor(max_workers=len(self.nodes)) as ex:
+                with ThreadPoolExecutor(
+                    max_workers=len(self.nodes), thread_name_prefix="skim-batch"
+                ) as ex:
                     batch_responses = list(ex.map(scan, self.nodes))
             else:
                 batch_responses = [scan(node) for node in self.nodes]

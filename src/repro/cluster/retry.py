@@ -114,6 +114,16 @@ class HedgePolicy:
     whichever response finishes the modeled race first — primary at its
     own modeled time, replica at ``delay + replica modeled`` — after
     verifying the two are bit-identical.
+
+    ``jitter_guard`` makes the race decision deterministic: modeled
+    shard times carry measured decode/filter components that jitter a
+    few percent between two runs of identical work, so the replica only
+    *wins* when it beats the primary by more than this relative margin
+    (``delay + replica < primary * (1 - jitter_guard)``).  Flapping
+    between two bit-identical responses on sub-jitter differences buys
+    nothing and makes the reported modeled time (and the hedge ledger)
+    nondeterministic; a genuine straggler rescue clears the guard by
+    orders of magnitude.
     """
 
     delay_s: float | None = None
@@ -121,6 +131,7 @@ class HedgePolicy:
     multiplier: float = 2.0
     min_delay_s: float = 0.05
     min_samples: int = 2
+    jitter_guard: float = 0.25
 
     def __post_init__(self):
         if self.delay_s is not None and self.delay_s < 0:
@@ -129,6 +140,8 @@ class HedgePolicy:
             raise ValueError("hedge quantile must be in (0, 1]")
         if self.min_delay_s < 0:
             raise ValueError("min_delay_s must be >= 0")
+        if not 0 <= self.jitter_guard < 1:
+            raise ValueError("jitter_guard must be in [0, 1)")
 
     def delay(self, samples_modeled_s: list[float]) -> float:
         """The hedge delay given the modeled times gathered so far."""

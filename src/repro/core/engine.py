@@ -357,7 +357,7 @@ def _rows_materialize(data: dict[str, np.ndarray], store, n: int) -> list:
     runs (paper: 240.4 s deserialize for LZ4 client-side).
     """
     offsets = {}
-    for name, arr in data.items():
+    for name in data:
         br = store.branches.get(name)
         if br is not None and br.jagged:
             counts = data[br.counts_branch].astype(np.int64)

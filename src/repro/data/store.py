@@ -755,11 +755,15 @@ class EventStore:
                 for n, metas in self._baskets.items()
             },
         }
-        hbytes = json.dumps(header).encode()
+        # sort_keys makes the header — and with it the whole file —
+        # deterministic in branch *content*, not dict insertion order;
+        # the blob section must follow the same sorted order because
+        # load() slurps blobs in header order
+        hbytes = json.dumps(header, sort_keys=True).encode()
         with open(path, "wb") as f:
             f.write(len(hbytes).to_bytes(8, "little"))
             f.write(hbytes)
-            for n in self.branches:
+            for n in sorted(self.branches):
                 for blob in self._blobs[n]:
                     f.write(blob)
 

@@ -30,7 +30,8 @@ def _log_scan(x: jnp.ndarray, combine) -> jnp.ndarray:
     n = x.shape[-1]
     shift = 1
     while shift < n:
-        shifted = jnp.pad(x[..., :-shift], [(0, 0)] * (x.ndim - 1) + [(shift, 0)])
+        pad = [(0, 0)] * (x.ndim - 1)
+        shifted = jnp.pad(x[..., :-shift], [*pad, (shift, 0)])
         x = combine(x, shifted)
         shift *= 2
     return x

@@ -29,6 +29,7 @@ from repro.serve.service import (
     ClusterBackend,
     DeterministicExecutor,
     EngineBackend,
+    ServiceError,
     SkimService,
 )
 
@@ -50,6 +51,7 @@ __all__ = [
     "JobJournal",
     "ManualClock",
     "PartialResult",
+    "ServiceError",
     "SharedScanEngine",
     "SharedScanResult",
     "SkimJob",

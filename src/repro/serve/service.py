@@ -71,6 +71,13 @@ from repro.serve.jobs import (
 COST_SCALE_BYTES = 1e6
 
 
+class ServiceError(RuntimeError):
+    """Typed failure of the service layer itself (not of any one job) —
+    e.g. the quantum budget exhausting with jobs still live.  Subclasses
+    ``RuntimeError`` so pre-existing ``except RuntimeError`` callers keep
+    working; the skim fabric's D004 lint requires the typed form."""
+
+
 # ---------------------------------------------------------------------------
 # backends: where a job actually executes
 # ---------------------------------------------------------------------------
@@ -497,7 +504,7 @@ class SkimService:
         while self.step():
             n += 1
             if n >= max_quanta:
-                raise RuntimeError(
+                raise ServiceError(
                     f"service still busy after {max_quanta} quanta"
                 )
         return n

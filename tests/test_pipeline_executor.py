@@ -204,7 +204,7 @@ def test_window_prefetcher_worker_exception_propagates(enabled):
     pf = WindowPrefetcher(10_000, 2_000, load, enabled=enabled)
     got = []
     with pytest.raises(RuntimeError, match="basket decode blew up"):
-        for start, _, payload in pf:
+        for start, _, _ in pf:
             got.append(start)
     # the windows before the crash were delivered in order
     assert got == [0, 2000]

@@ -95,7 +95,7 @@ def test_stage_and_semantics():
 
 
 def test_branchmap_minimal_set(caplog):
-    avail = [f"HLT_path{i:03d}" for i in range(20)] + ["HLT_IsoMu24", "MET_pt"]
+    avail = [*(f"HLT_path{i:03d}" for i in range(20)), "HLT_IsoMu24", "MET_pt"]
     with caplog.at_level(logging.WARNING, logger="repro.branchmap"):
         sel, excl = expand_branches(["HLT_*", "MET_pt"], avail)
     assert sel == ["HLT_IsoMu24", "MET_pt"]
@@ -104,7 +104,7 @@ def test_branchmap_minimal_set(caplog):
 
 
 def test_branchmap_force_all():
-    avail = [f"HLT_path{i:03d}" for i in range(20)] + ["HLT_IsoMu24"]
+    avail = [*(f"HLT_path{i:03d}" for i in range(20)), "HLT_IsoMu24"]
     sel, excl = expand_branches(["HLT_*"], avail, force_all=True)
     assert len(sel) == 21 and not excl
 

@@ -1,0 +1,169 @@
+"""The skimlint framework and rule catalog (``tools/skimlint``).
+
+Three layers: the per-rule snippet corpus (violating / clean /
+suppressed — the same corpus ``--self-test`` runs), framework behavior
+(suppressions, JSON schema stability, syntax-error handling, the CLI's
+exit codes), and the repo-is-clean end-to-end gate: ``src/repro`` lints
+with zero unsuppressed findings, and every suppression names a rule ID
+(a bare ``# skimlint: ignore`` is itself a finding, X001).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from tools.skimlint import (  # noqa: E402
+    JSON_SCHEMA_VERSION,
+    all_rules,
+    lint_paths,
+    lint_source,
+)
+from tools.skimlint.__main__ import main as skimlint_main  # noqa: E402
+from tools.skimlint.core import render_json  # noqa: E402
+from tools.skimlint.selftest import CORPUS, run_selftest  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# the rule corpus
+# ---------------------------------------------------------------------------
+
+
+def test_selftest_corpus_passes():
+    assert run_selftest() == []
+
+
+def test_every_registered_rule_has_a_corpus_entry():
+    for rid in all_rules():
+        assert rid in CORPUS, f"{rid}: no self-test corpus entry"
+        assert CORPUS[rid]["bad"], f"{rid}: no violating snippet"
+        assert CORPUS[rid]["good"], f"{rid}: no clean snippet"
+
+
+@pytest.mark.parametrize("rid", sorted(CORPUS))
+def test_rule_corpus(rid):
+    """Per-rule granularity over the same snippets ``--self-test`` runs."""
+    cases = CORPUS[rid]
+    path = cases.get("path", "src/repro/snippet.py")
+    path = path if isinstance(path, str) else path[0]
+    for src in cases.get("bad", ()):
+        res = lint_source(src, path=path)
+        assert any(f.rule == rid for f in res.findings), src
+    for src in cases.get("good", ()):
+        res = lint_source(src, path=path)
+        assert not [f for f in res.findings if f.rule == rid], src
+    for src in cases.get("suppressed", ()):
+        res = lint_source(src, path=path)
+        assert not any(f.rule == rid for f in res.findings), src
+        assert any(f.rule == rid for f in res.suppressed), src
+
+
+def test_import_alias_resolution():
+    """D001 sees through every import spelling of the same callable."""
+    for src in (
+        "import time\nt0 = time.time()\n",
+        "import time as t\nt0 = t.time()\n",
+        "from time import time\nt0 = time()\n",
+        "from time import time as now\nt0 = now()\n",
+        "import numpy.random as npr\nnpr.shuffle([1])\n",
+    ):
+        res = lint_source(src, path="src/repro/x.py")
+        assert [f.rule for f in res.findings] == ["D001"], src
+
+
+def test_d004_scoped_to_cluster_and_serve():
+    src = "def f():\n    raise RuntimeError('x')\n"
+    for path, hits in (
+        ("src/repro/cluster/a.py", 1),
+        ("src/repro/serve/a.py", 1),
+        ("src/repro/core/a.py", 0),
+    ):
+        res = lint_source(src, path=path)
+        assert len([f for f in res.findings if f.rule == "D004"]) == hits, path
+
+
+def test_e001_exempts_obs_schema():
+    src = "def f(extras):\n    extras['k'] = 1\n"
+    assert lint_source(src, path="src/repro/obs/schema.py").findings == []
+    assert [
+        f.rule for f in lint_source(src, path="src/repro/obs/other.py").findings
+    ] == ["E001"]
+
+
+# ---------------------------------------------------------------------------
+# framework behavior
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_is_per_rule():
+    """An ignore[D001] must not blanket-suppress other rules on the line."""
+    src = (
+        "import time, json\n"
+        "doc = json.dumps({'a': time.time()})  # skimlint: ignore[D001]\n"
+    )
+    res = lint_source(src, path="src/repro/x.py")
+    assert [f.rule for f in res.findings] == ["D003"]
+    assert [f.rule for f in res.suppressed] == ["D001"]
+
+
+def test_bare_suppression_is_a_finding():
+    src = "x = 1  # skimlint: ignore\n"
+    res = lint_source(src, path="src/repro/x.py")
+    assert [f.rule for f in res.findings] == ["X001"]
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    res = lint_source("def f(:\n", path="src/repro/x.py")
+    assert [f.rule for f in res.findings] == ["E999"]
+
+
+def test_select_filters_rules():
+    src = "import time, json\ndoc = json.dumps({'a': time.time()})\n"
+    res = lint_source(src, path="src/repro/x.py", select={"D003"})
+    assert [f.rule for f in res.findings] == ["D003"]
+
+
+def test_json_schema_stable():
+    """The JSON output shape is a contract: version + exact key sets."""
+    assert JSON_SCHEMA_VERSION == 1
+    res = lint_source("import time\nt0 = time.time()\n", path="src/repro/x.py")
+    doc = json.loads(render_json(res))
+    assert doc["version"] == JSON_SCHEMA_VERSION
+    assert sorted(doc) == ["counts", "files", "findings", "suppressed", "version"]
+    assert doc["counts"] == {"D001": 1}
+    (finding,) = doc["findings"]
+    assert sorted(finding) == ["col", "line", "message", "path", "rule"]
+    assert finding["rule"] == "D001"
+    assert finding["line"] == 2
+    # deterministic serialization: two renders are byte-identical
+    assert render_json(res) == render_json(res)
+
+
+def test_cli_exit_codes(tmp_path):
+    assert skimlint_main(["--list-rules"]) == 0
+    assert skimlint_main(["--no-lint", "--self-test"]) == 0
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert skimlint_main([str(clean)]) == 0
+    dirty = tmp_path / "dirty.py"
+    dirty.write_text("import time\nt0 = time.time()\n")
+    assert skimlint_main([str(dirty)]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the repo gate
+# ---------------------------------------------------------------------------
+
+
+def test_src_repro_is_clean():
+    """Zero unsuppressed findings in the tree — and because X001 flags
+    bare ignores, zero findings also proves every suppression in the
+    tree names the rule it suppresses."""
+    res = lint_paths([str(ROOT / "src" / "repro")])
+    assert res.findings == [], [f.render() for f in res.findings]
+    assert res.files > 30  # the walk actually saw the tree

@@ -1,0 +1,466 @@
+"""The compiled-artifact verifier (``repro.analysis.verify``).
+
+Two directions, per invariant: the verifier must ACCEPT every
+representative fixture query (the same corpus ``python -m tools.skimlint
+--verify-fixtures`` drives), and it must REJECT hand-corrupted Programs
+and SkimPlans with a typed :class:`VerifyError` naming the broken
+invariant.  Plus the ``REPRO_VERIFY`` gating contract (explicit-string
+env check, hooks fire only when on, off costs zero calls) and the pinned
+regressions for the determinism fixes the lint rules surfaced.
+"""
+
+import dataclasses
+import os
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))
+
+from repro.analysis.verify import (  # noqa: E402
+    CANONICAL_QUERY_FIELDS,
+    VerifyError,
+    program_reads,
+    verify_cache_key_coverage,
+    verify_enabled,
+    verify_plan,
+    verify_program,
+)
+from repro.core.expr import RPN_CONST  # noqa: E402
+from repro.core.planner import plan_skim  # noqa: E402
+from repro.core.query import parse_query  # noqa: E402
+from repro.core.zonemap import WindowDecision  # noqa: E402
+from repro.data.synth import make_nanoaod_like  # noqa: E402
+from repro.kernels.predicate_eval import compile_query  # noqa: E402
+from tools.skimlint.fixtures import (  # noqa: E402
+    FIXTURE_QUERIES,
+    FIXTURE_STORE,
+    FIXTURE_WINDOW_EVENTS,
+    verify_fixtures,
+)
+
+KITCHEN_SINK = next(d for d in FIXTURE_QUERIES if d["name"] == "kitchen-sink")
+
+
+@pytest.fixture(scope="module")
+def store():
+    return make_nanoaod_like(**FIXTURE_STORE)
+
+
+@pytest.fixture(scope="module")
+def query():
+    return parse_query({k: v for k, v in KITCHEN_SINK.items() if k != "name"})
+
+
+@pytest.fixture(scope="module")
+def program(query):
+    return compile_query(query)
+
+
+@pytest.fixture()
+def plan(query, store):
+    # function-scoped: corruption tests mutate the plan in place
+    return plan_skim(
+        query, store, window_events=FIXTURE_WINDOW_EVENTS, prune=True, cascade=True
+    )
+
+
+# ---------------------------------------------------------------------------
+# accept: the fixture corpus
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_corpus_verifies_clean():
+    assert verify_fixtures() == []
+
+
+def test_program_reads_equal_stage_fetch_sets(plan, store):
+    """The coverage invariant holds stage-by-stage on a live plan: the
+    read set derived from the compiled sub-Program alone equals the fetch
+    set the planner derived from the AST node."""
+    assert plan.cascade is not None and plan.cascade.n_stages >= 4
+    for stage in plan.cascade.stages:
+        assert program_reads(stage.program, store) == set(stage.branches)
+
+
+# ---------------------------------------------------------------------------
+# reject: corrupted Programs
+# ---------------------------------------------------------------------------
+
+
+def _replace_group(program, g, **kw):
+    groups = list(program.groups)
+    groups[g] = dataclasses.replace(groups[g], **kw)
+    return dataclasses.replace(program, groups=tuple(groups))
+
+
+def _expr_group_index(program):
+    return next(i for i, g in enumerate(program.groups) if g.rpn)
+
+
+def _raises_invariant(fn, invariant):
+    with pytest.raises(VerifyError) as exc:
+        fn()
+    assert exc.value.invariant == invariant
+    assert invariant in str(exc.value)
+
+
+def test_program_accepts_baseline(program):
+    verify_program(program)
+
+
+def test_rejects_out_of_range_term_slot(program):
+    bad = _replace_group(program, 0, term_ids=(999,))
+    _raises_invariant(lambda: verify_program(bad), "term-slot-bounds")
+
+
+def test_rejects_unknown_group_kind(program):
+    bad = _replace_group(program, 0, kind=42)
+    _raises_invariant(lambda: verify_program(bad), "group-opcode")
+
+
+def test_rejects_unknown_term_op(program):
+    grp = program.groups[0]
+    bad = _replace_group(program, 0, ops=(99,) * len(grp.ops))
+    _raises_invariant(lambda: verify_program(bad), "group-opcode")
+
+
+def test_rejects_group_wiring_length_mismatch(program):
+    bad = dataclasses.replace(
+        program, group_collections=program.group_collections[:-1]
+    )
+    _raises_invariant(lambda: verify_program(bad), "group-wiring")
+
+
+def test_rejects_negative_min_count(program):
+    count_g = next(
+        i for i, g in enumerate(program.groups) if g.kind == 0 and g.min_count >= 0
+    )
+    bad = _replace_group(program, count_g, min_count=-1)
+    _raises_invariant(lambda: verify_program(bad), "group-shape")
+
+
+def test_rejects_unknown_rpn_opcode(program):
+    g = _expr_group_index(program)
+    rpn = list(program.groups[g].rpn)
+    rpn[0] = (99, rpn[0][1])
+    bad = _replace_group(program, g, rpn=tuple(rpn))
+    _raises_invariant(lambda: verify_program(bad), "rpn-opcode")
+
+
+def test_rejects_unbalanced_rpn(program):
+    g = _expr_group_index(program)
+    rpn = program.groups[g].rpn
+    # an extra operand push leaves stack depth 2 at the end
+    bad = _replace_group(program, g, rpn=rpn + ((RPN_CONST, 1.0),))
+    _raises_invariant(lambda: verify_program(bad), "rpn-stack-balance")
+
+
+def test_rejects_rpn_underflow(program):
+    g = _expr_group_index(program)
+    # binary op on a single-element stack
+    from repro.core.expr import RPN_ADD
+
+    bad = _replace_group(program, g, rpn=((RPN_CONST, 1.0), (RPN_ADD, 0), *[]))
+    _raises_invariant(lambda: verify_program(bad), "rpn-stack-balance")
+
+
+def test_rejects_non_finite_rpn_constant(program):
+    g = _expr_group_index(program)
+    rpn = ((RPN_CONST, float("nan")),)
+    bad = _replace_group(program, g, rpn=rpn)
+    _raises_invariant(lambda: verify_program(bad), "rpn-constant")
+
+
+# ---------------------------------------------------------------------------
+# reject: corrupted plans
+# ---------------------------------------------------------------------------
+
+
+def _replace_stage(plan, i, **kw):
+    plan.cascade.stages[i] = dataclasses.replace(plan.cascade.stages[i], **kw)
+
+
+def test_plan_accepts_baseline(plan, store):
+    verify_plan(plan, store)
+
+
+def test_rejects_missing_fetch_branch(plan, store):
+    i = next(
+        i for i, s in enumerate(plan.cascade.stages) if len(s.branches) > 1
+    )
+    _replace_stage(plan, i, branches=plan.cascade.stages[i].branches[:-1])
+    _raises_invariant(lambda: verify_plan(plan, store), "stage-fetch-coverage")
+
+
+def test_rejects_overfetched_branch(plan, store):
+    stage = plan.cascade.stages[0]
+    extra = next(
+        b for b in store.branch_names() if b not in set(stage.branches)
+    )
+    _replace_stage(plan, 0, branches=stage.branches + (extra,))
+    _raises_invariant(lambda: verify_plan(plan, store), "stage-fetch-coverage")
+
+
+def test_rejects_unpinned_head(plan, store):
+    order = plan.cascade.static_order
+    assert len(order) >= 2
+    plan.cascade.static_order = list(reversed(order))
+    _raises_invariant(lambda: verify_plan(plan, store), "pinned-head")
+
+
+def test_rejects_non_permutation_order(plan, store):
+    plan.cascade.static_order = [0] * plan.cascade.n_stages
+    _raises_invariant(lambda: verify_plan(plan, store), "pinned-head")
+
+
+def test_rejects_bad_stage_prices(plan, store):
+    _replace_stage(plan, 0, est_selectivity=1.5)
+    _raises_invariant(lambda: verify_plan(plan, store), "stage-price")
+
+
+def test_rejects_negative_stage_bytes(plan, store):
+    _replace_stage(plan, 0, est_bytes=-1)
+    _raises_invariant(lambda: verify_plan(plan, store), "stage-price")
+
+
+def test_rejects_broken_branch_partition(plan, store):
+    assert plan.output_only_branches  # phase 2 nonempty for this query
+    plan.output_only_branches = plan.output_only_branches[:-1]
+    _raises_invariant(lambda: verify_plan(plan, store), "plan-branch-partition")
+
+
+def test_rejects_unknown_plan_branch(plan, store):
+    plan.filter_branches = [*plan.filter_branches, "NoSuch_branch"]
+    _raises_invariant(lambda: verify_plan(plan, store), "plan-branch-partition")
+
+
+def test_rejects_non_tiling_window_decisions(plan, store):
+    plan.window_decisions = [
+        WindowDecision(0, store.n_events // 2, "scan", 0, 0, 0, 0)
+    ]
+    _raises_invariant(lambda: verify_plan(plan, store), "window-decisions")
+
+
+# ---------------------------------------------------------------------------
+# cache-key field coverage
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_coverage_accepts_current_query():
+    verify_cache_key_coverage()
+
+
+def test_rejects_unrecorded_cache_key_version(monkeypatch):
+    from repro.cluster import cache
+
+    monkeypatch.setattr(cache, "CACHE_KEY_VERSION", 99)
+    _raises_invariant(verify_cache_key_coverage, "cache-key-version")
+
+
+def test_rejects_new_query_field_without_version_bump(monkeypatch):
+    """Simulate a Query field landing without a cache-key bump by
+    shrinking the recorded field set for the current version."""
+    from repro.cluster.cache import CACHE_KEY_VERSION
+
+    recorded = CANONICAL_QUERY_FIELDS[CACHE_KEY_VERSION]
+    monkeypatch.setitem(
+        CANONICAL_QUERY_FIELDS, CACHE_KEY_VERSION, recorded - {"cascade"}
+    )
+    _raises_invariant(verify_cache_key_coverage, "cache-key-coverage")
+
+
+# ---------------------------------------------------------------------------
+# REPRO_VERIFY gating
+# ---------------------------------------------------------------------------
+
+
+def test_suite_runs_with_verification_on():
+    """conftest defaults REPRO_VERIFY=1: every compile/plan in tier-1 is
+    a verified compile/plan.  An explicit REPRO_VERIFY=0 (the documented
+    overhead A/B, EXPERIMENTS.md) skips rather than fails — the guard is
+    that conftest *sets* the default, not that nobody may override it."""
+    assert os.environ.get("REPRO_VERIFY") is not None
+    if not verify_enabled():
+        pytest.skip("REPRO_VERIFY explicitly disabled for this run")
+
+
+@pytest.mark.parametrize(
+    "value,on",
+    [
+        ("1", True), ("true", True), ("on", True), ("TRUE", True),
+        ("0", False), ("", False), ("false", False), ("off", False),
+    ],
+)
+def test_verify_enabled_parses_explicitly(monkeypatch, value, on):
+    """The gate must parse the string — `bool(\"0\")` is True in Python,
+    so an implicit-truthiness gate would run verification under
+    REPRO_VERIFY=0."""
+    monkeypatch.setenv("REPRO_VERIFY", value)
+    assert verify_enabled() is on
+
+
+def test_verification_off_costs_zero_calls(monkeypatch, query, store):
+    """With the gate off, the hooks never reach the verifier: the
+    bench-smoke guarantee that REPRO_VERIFY=0 skims price verification
+    at exactly zero."""
+    import repro.analysis.verify as verify_mod
+
+    calls = []
+    monkeypatch.setattr(
+        verify_mod, "verify_program", lambda p: calls.append("program")
+    )
+    monkeypatch.setattr(
+        verify_mod, "verify_plan", lambda p, s: calls.append("plan")
+    )
+    monkeypatch.setenv("REPRO_VERIFY", "0")
+    compile_query(query)
+    plan_skim(query, store, window_events=FIXTURE_WINDOW_EVENTS, cascade=True)
+    assert calls == []
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    compile_query(query)
+    plan_skim(query, store, window_events=FIXTURE_WINDOW_EVENTS, cascade=True)
+    assert "program" in calls and "plan" in calls
+
+
+def test_hook_rejects_at_plan_time(monkeypatch, query, store):
+    """A corrupted artifact fails at plan time, not mid-scan: break the
+    cache-key record and the very next plan_skim refuses."""
+    from repro.cluster import cache
+
+    monkeypatch.setenv("REPRO_VERIFY", "1")
+    monkeypatch.setattr(cache, "CACHE_KEY_VERSION", 99)
+    with pytest.raises(VerifyError):
+        plan_skim(query, store, window_events=FIXTURE_WINDOW_EVENTS, cascade=True)
+
+
+# ---------------------------------------------------------------------------
+# pinned regressions for the violations the lint rules surfaced
+# ---------------------------------------------------------------------------
+
+
+def test_query_hash_pinned_across_sort_keys_fix():
+    """D003 fix (cluster/cache.py stage-sort key gained sort_keys=True):
+    node docs are JSON *lists*, so the canonical form is byte-identical —
+    this pin was recorded BEFORE the fix and must never drift, or every
+    warm cache in the fleet silently misses."""
+    from repro.cluster.cache import query_hash
+
+    doc = {
+        "branches": ["Electron_*", "MET_*", "HLT_*"],
+        "selection": {
+            "preselection": [{"branch": "nElectron", "op": ">=", "value": 1}],
+            "object": [
+                {
+                    "collection": "Electron",
+                    "cuts": [
+                        {"var": "pt", "op": ">", "value": 20.0},
+                        {"var": "eta", "op": "abs<", "value": 2.4},
+                    ],
+                    "min_count": 1,
+                }
+            ],
+            "event": [
+                {
+                    "type": "any",
+                    "branches": ["HLT_IsoMu24", "HLT_Ele32_WPTight_Gsf"],
+                },
+                {"type": "cut", "branch": "MET_pt", "op": ">", "value": 40.0},
+                {
+                    "type": "mass",
+                    "collections": ["Electron", "Electron"],
+                    "window": [80.0, 100.0],
+                },
+                {
+                    "type": "expr",
+                    "expr": "MET_pt + 0.5*sum(Jet_pt)",
+                    "op": ">",
+                    "value": 150.0,
+                },
+            ],
+        },
+    }
+    assert query_hash(doc) == (
+        "387d94bbaa795809527acb5c08ba0a952ff8048eb5b85e27ad5a372bf6c729cc"
+    )
+
+
+def test_store_header_roundtrips_with_sorted_keys(tmp_path, store):
+    """D003 fix (store save header json.dumps gained sort_keys=True):
+    the header must round-trip and the manifest hash must not depend on
+    dict insertion order."""
+    from repro.data.store import EventStore
+
+    import numpy as np
+
+    path = tmp_path / "store.bin"
+    store.save(str(path))
+    loaded = EventStore.load(str(path))
+    # loaded stores carry branches in sorted (canonical) order; the
+    # content — names, manifest address, decoded values — is identical
+    assert loaded.branch_names() == sorted(store.branch_names())
+    assert set(loaded.branch_names()) == set(store.branch_names())
+    assert loaded.manifest_hash() == store.manifest_hash()
+    np.testing.assert_array_equal(
+        loaded.read_flat("MET_pt"), store.read_flat("MET_pt")
+    )
+    v0, c0 = store.read_jagged("Electron_pt")
+    v1, c1 = loaded.read_jagged("Electron_pt")
+    np.testing.assert_array_equal(c1, c0)
+    np.testing.assert_array_equal(v1, v0)
+
+
+def test_service_error_is_typed(store):
+    """D004 fix: quantum-budget exhaustion raises the typed ServiceError
+    (still a RuntimeError for pre-existing callers)."""
+    from repro.serve import ServiceError, SkimService
+
+    assert issubclass(ServiceError, RuntimeError)
+    svc = SkimService(store)
+    svc.submit(
+        {
+            "branches": ["MET_pt"],
+            "selection": {
+                "preselection": [{"branch": "MET_pt", "op": ">", "value": 10.0}]
+            },
+        }
+    )
+    with pytest.raises(ServiceError, match="still busy after 1 quanta"):
+        svc.run_until_idle(max_quanta=1)
+
+
+def test_batch_scatter_threads_are_named(store):
+    """D005 fix: the tenant-batch scatter pool carries the skim-* thread
+    naming convention (PR 8), so profiles/stack dumps attribute its work."""
+    from repro.cluster import StorageNode, build_cluster
+
+    coord = build_cluster(store, 2, replication=False)
+    coord.concurrency = "threads"
+    seen = []
+    orig = StorageNode.execute_batch
+
+    def spy(self, queries):
+        seen.append(threading.current_thread().name)
+        return orig(self, queries)
+
+    StorageNode.execute_batch = spy
+    try:
+        coord.run_batch(
+            [
+                {
+                    "branches": ["MET_pt"],
+                    "selection": {
+                        "preselection": [
+                            {"branch": "MET_pt", "op": ">", "value": 10.0}
+                        ]
+                    },
+                }
+            ]
+        )
+    finally:
+        StorageNode.execute_batch = orig
+    assert seen and all(n.startswith("skim-batch") for n in seen)

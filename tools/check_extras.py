@@ -9,8 +9,12 @@ compatibility ``extras`` dict through ``SkimReport.legacy_extras()`` /
 fails the lint step, so the extras key set can only grow deliberately in
 one place (``KNOWN_EXTRAS``).
 
-Reads (``extras["key"]`` on the right-hand side, ``.get(...)``, ``in``)
-are fine everywhere; only writes are schema mutations.
+Since PR 9 the regex core is retired: this is a thin shim over the
+skimlint **E001** rule (``tools/skimlint/rules.py``), which matches the
+same writes on the AST instead — strings and comments can never false-
+positive, and attribute writes (``res.extras[...] = ...``) are caught
+too.  The ``scan()`` / ``main()`` API and exit codes are unchanged, so
+existing ``make lint`` / CI invocations keep working.
 
 Usage::
 
@@ -20,34 +24,25 @@ Usage::
 
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
-#: subscript-assignment to an extras dict: ``extras["k"] =``, ``+=``,
-#: ``|=`` — but not ``==`` comparisons
-_WRITE = re.compile(
-    r"""\bextras\s*\[\s*['"][^'"\]]*['"]\s*\]\s*(?:=(?!=)|\+=|\|=)"""
-)
+if __package__ in (None, ""):  # loaded by path (CLI, importlib spec)
+    _root = Path(__file__).resolve().parents[1]
+    if str(_root) not in sys.path:
+        sys.path.insert(0, str(_root))
 
-#: the one module allowed to define extras shapes
-_EXEMPT = ("obs/schema.py",)
+from tools.skimlint.core import lint_paths  # noqa: E402
 
 
 def scan(paths: list[str | Path]) -> list[tuple[str, int, str]]:
     """Return ``(path, lineno, line)`` for every bare extras write."""
-    files: list[Path] = []
-    for p in paths:
-        p = Path(p)
-        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    result = lint_paths([str(p) for p in paths], select={"E001"})
     violations = []
-    for f in files:
-        if any(str(f).endswith(e) for e in _EXEMPT):
-            continue
-        for i, line in enumerate(f.read_text().splitlines(), 1):
-            code = line.split("#", 1)[0]
-            if _WRITE.search(code):
-                violations.append((str(f), i, line.strip()))
+    for f in sorted(result.findings, key=lambda f: (f.path, f.line)):
+        lines = Path(f.path).read_text().splitlines()
+        line = lines[f.line - 1].strip() if 0 < f.line <= len(lines) else ""
+        violations.append((f.path, f.line, line))
     return violations
 
 

@@ -1,0 +1,46 @@
+"""skimlint: repo-native AST static analysis (DESIGN.md §15).
+
+The repo's signature invariant — every fast path bit-identical to the
+single-node reference — is enforced dynamically by tests and chaos
+seeds, but the bug classes that break it are *statically* detectable:
+wall-clock leaking into modeled time, unsorted iteration feeding a
+content address, a lock held across a generator ``yield``.  Each lint
+rule here encodes one invariant the codebase previously enforced only by
+convention in DESIGN.md.
+
+Zero dependencies beyond the standard library ``ast`` module.  See
+``tools/skimlint/rules.py`` for the rule catalog, ``core.py`` for the
+framework (suppressions, output formats), ``fixtures.py`` for the
+``--verify-fixtures`` compiled-artifact corpus, and ``selftest.py`` for
+the per-rule violating/clean snippet corpus.
+
+Usage::
+
+    python -m tools.skimlint src/repro            # lint, text output
+    python -m tools.skimlint src/repro --json     # machine-readable
+    python -m tools.skimlint --self-test          # rule corpus check
+    python -m tools.skimlint --verify-fixtures    # compile+verify corpus
+"""
+
+from tools.skimlint.core import (
+    JSON_SCHEMA_VERSION,
+    Finding,
+    LintResult,
+    Rule,
+    all_rules,
+    lint_paths,
+    lint_source,
+    rule,
+)
+from tools.skimlint import rules as _rules  # noqa: F401  (registers rules)
+
+__all__ = [
+    "JSON_SCHEMA_VERSION",
+    "Finding",
+    "LintResult",
+    "Rule",
+    "all_rules",
+    "lint_paths",
+    "lint_source",
+    "rule",
+]

@@ -1,0 +1,104 @@
+"""CLI: ``python -m tools.skimlint [paths...] [options]``.
+
+Exit status is 0 only when every requested check passes: lint findings
+(unsuppressed), self-test corpus failures, and fixture-verification
+failures all exit 1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.skimlint.core import all_rules, lint_paths, render_json
+
+
+def _ensure_repro_importable() -> None:
+    """``--verify-fixtures`` needs ``repro``; insert ``src/`` when the
+    caller did not set PYTHONPATH (running from the repo root)."""
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        src = Path(__file__).resolve().parents[2] / "src"
+        if src.is_dir():
+            sys.path.insert(0, str(src))
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.skimlint",
+        description="repo-native static analysis (DESIGN.md §15)",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src/repro"],
+        help="files/directories to lint (default: src/repro)",
+    )
+    parser.add_argument("--json", action="store_true", help="JSON output")
+    parser.add_argument(
+        "--select", default=None,
+        help="comma-separated rule IDs to run (default: all)",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    parser.add_argument(
+        "--self-test", action="store_true",
+        help="run the per-rule violating/clean snippet corpus",
+    )
+    parser.add_argument(
+        "--verify-fixtures", action="store_true",
+        help="compile + statically verify the representative query corpus",
+    )
+    parser.add_argument(
+        "--no-lint", action="store_true",
+        help="skip the lint pass (run only --self-test/--verify-fixtures)",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rid, r in sorted(all_rules().items()):
+            print(f"{rid}  {r.title}")
+        return 0
+
+    failed = False
+
+    if args.self_test:
+        from tools.skimlint.selftest import run_selftest
+
+        failures = run_selftest()
+        for f in failures:
+            print(f"self-test: {f}", file=sys.stderr)
+        print(f"skimlint --self-test: {'FAIL' if failures else 'ok'}")
+        failed |= bool(failures)
+
+    if not args.no_lint:
+        select = (
+            {s.strip() for s in args.select.split(",")} if args.select else None
+        )
+        result = lint_paths(args.paths, select=select)
+        if args.json:
+            print(render_json(result))
+        else:
+            print(result.render_text())
+        failed |= bool(result.findings)
+
+    if args.verify_fixtures:
+        _ensure_repro_importable()
+        from tools.skimlint.fixtures import FIXTURE_QUERIES, verify_fixtures
+
+        failures = verify_fixtures()
+        for f in failures:
+            print(f"verify-fixtures: {f}", file=sys.stderr)
+        print(
+            f"skimlint --verify-fixtures: "
+            f"{'FAIL' if failures else 'ok'} "
+            f"({len(FIXTURE_QUERIES)} queries compiled + verified)"
+        )
+        failed |= bool(failures)
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

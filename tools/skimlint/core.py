@@ -1,0 +1,207 @@
+"""skimlint framework: rule registry, suppressions, runner, output.
+
+A :class:`Rule` is a named check over one parsed module.  Rules register
+themselves with the :func:`rule` decorator (importing
+``tools.skimlint.rules`` populates the registry), so adding a rule is
+one class in one file — the runner, suppression handling, and both
+output formats come for free.
+
+Suppressions are per-line and must carry the rule ID::
+
+    t0 = time.time()  # skimlint: ignore[D001]
+    t0 = time.time()  # skimlint: ignore[D001,D003]   (several rules)
+
+A bare ``# skimlint: ignore`` without a rule ID does not suppress
+anything — it is itself reported as a finding (rule ``X001``), so every
+suppression in the repo names the invariant it waives.  A suppression
+on a multi-line statement's *first* line covers findings anchored there.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+#: bump when the JSON output shape changes (tests pin this)
+JSON_SCHEMA_VERSION = 1
+
+_SUPPRESS = re.compile(r"#\s*skimlint:\s*ignore\[([A-Z]\d{3}(?:\s*,\s*[A-Z]\d{3})*)\]")
+_SUPPRESS_BARE = re.compile(r"#\s*skimlint:\s*ignore(?!\[)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def as_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+        }
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+class Rule:
+    """Base class: subclass, set ``id``/``title``, implement ``check``.
+
+    ``check`` receives the parsed module, the source text, and the path,
+    and returns an iterable of :class:`Finding`.  ``applies_to`` scopes a
+    rule to path patterns (e.g. D004 only inspects ``cluster/`` and
+    ``serve/``); the default applies everywhere.
+    """
+
+    id: str = "X000"
+    title: str = ""
+
+    def applies_to(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.Module, source: str, path: str):  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(self, node: ast.AST, path: str, message: str) -> Finding:
+        return Finding(
+            rule=self.id,
+            path=path,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0) + 1,
+            message=message,
+        )
+
+
+_REGISTRY: dict[str, Rule] = {}
+
+
+def rule(cls: type[Rule]) -> type[Rule]:
+    """Class decorator: instantiate and register a rule by its ID."""
+    inst = cls()
+    if inst.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {inst.id}")
+    _REGISTRY[inst.id] = inst
+    return cls
+
+
+def all_rules() -> dict[str, Rule]:
+    """Registered rules by ID (import ``tools.skimlint`` to populate)."""
+    return dict(_REGISTRY)
+
+
+@dataclass
+class LintResult:
+    """Findings plus suppression accounting for one lint run."""
+
+    findings: list[Finding] = field(default_factory=list)
+    suppressed: list[Finding] = field(default_factory=list)
+    files: int = 0
+
+    def as_dict(self) -> dict:
+        counts: dict[str, int] = {}
+        for f in self.findings:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        return {
+            "version": JSON_SCHEMA_VERSION,
+            "files": self.files,
+            "findings": [f.as_dict() for f in sorted_findings(self.findings)],
+            "suppressed": len(self.suppressed),
+            "counts": dict(sorted(counts.items())),
+        }
+
+    def render_text(self) -> str:
+        lines = [f.render() for f in sorted_findings(self.findings)]
+        lines.append(
+            f"skimlint: {len(self.findings)} finding(s), "
+            f"{len(self.suppressed)} suppressed, {self.files} file(s)"
+        )
+        return "\n".join(lines)
+
+
+def sorted_findings(findings: list[Finding]) -> list[Finding]:
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def _suppressions(source: str) -> tuple[dict[int, set[str]], list[tuple[int, int]]]:
+    """Per-line suppressed rule IDs, plus bare-ignore (line, col) markers."""
+    by_line: dict[int, set[str]] = {}
+    bare: list[tuple[int, int]] = []
+    for i, text in enumerate(source.splitlines(), 1):
+        m = _SUPPRESS.search(text)
+        if m:
+            by_line[i] = {s.strip() for s in m.group(1).split(",")}
+        elif _SUPPRESS_BARE.search(text):
+            bare.append((i, _SUPPRESS_BARE.search(text).start() + 1))
+    return by_line, bare
+
+
+def lint_source(
+    source: str,
+    path: str = "<string>",
+    select: set[str] | None = None,
+) -> LintResult:
+    """Lint one module's source text with every registered rule."""
+    result = LintResult(files=1)
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as exc:
+        result.findings.append(
+            Finding("E999", path, exc.lineno or 0, (exc.offset or 0), f"syntax error: {exc.msg}")
+        )
+        return result
+    suppressed_by_line, bare = _suppressions(source)
+    for line, col in bare:
+        result.findings.append(
+            Finding(
+                "X001", path, line, col,
+                "suppression without a rule ID — use `# skimlint: ignore[Dnnn]`",
+            )
+        )
+    for rid, r in sorted(_REGISTRY.items()):
+        if select is not None and rid not in select:
+            continue
+        if not r.applies_to(path):
+            continue
+        for f in r.check(tree, source, path):
+            if f.rule in suppressed_by_line.get(f.line, ()):
+                result.suppressed.append(f)
+            else:
+                result.findings.append(f)
+    return result
+
+
+def iter_py_files(paths) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        else:
+            files.append(p)
+    return files
+
+
+def lint_paths(paths, select: set[str] | None = None) -> LintResult:
+    """Lint files/directories; aggregates per-file results."""
+    total = LintResult()
+    for f in iter_py_files(paths):
+        one = lint_source(f.read_text(), path=str(f), select=select)
+        total.findings.extend(one.findings)
+        total.suppressed.extend(one.suppressed)
+        total.files += 1
+    return total
+
+
+def render_json(result: LintResult) -> str:
+    return json.dumps(result.as_dict(), sort_keys=True, indent=2)

@@ -1,0 +1,202 @@
+"""Representative query corpus for ``--verify-fixtures``.
+
+The lint half of skimlint proves source-level invariants; this half
+exercises the *compiled-artifact* verifier (``repro.analysis.verify``)
+over queries spanning every predicate-node kind — flat cuts, trigger
+ORs, object selections, HT, invariant-mass windows, ΔR, arithmetic
+expressions — plus the era-robustness (absent trigger) and strict
+variants.  Each fixture is compiled to a :class:`Program` and lowered to
+a pruned+cascaded :class:`SkimPlan` against a small synthetic store,
+then ``verify_program``/``verify_plan`` must accept it.
+
+Importing this module requires ``repro`` on the path (``__main__``
+inserts ``src/`` when needed); the lint half never imports it.
+"""
+
+from __future__ import annotations
+
+#: every entry must plan+compile+verify cleanly against the fixture store
+FIXTURE_QUERIES: list[dict] = [
+    {
+        "name": "presel-flat-cut",
+        "branches": ["MET_*"],
+        "selection": {
+            "preselection": [{"branch": "MET_pt", "op": ">", "value": 40.0}]
+        },
+    },
+    {
+        "name": "object-selection",
+        "branches": ["Electron_*", "nElectron"],
+        "selection": {
+            "object": [
+                {
+                    "collection": "Electron",
+                    "cuts": [
+                        {"var": "pt", "op": ">", "value": 20.0},
+                        {"var": "eta", "op": "abs<", "value": 2.4},
+                    ],
+                    "min_count": 1,
+                }
+            ]
+        },
+    },
+    {
+        "name": "trigger-or",
+        "branches": ["MET_pt"],
+        "selection": {
+            "event": [
+                {"type": "any", "branches": ["HLT_IsoMu24", "HLT_Ele32_WPTight_Gsf"]}
+            ]
+        },
+    },
+    {
+        "name": "trigger-or-era-absent",
+        "branches": ["MET_pt"],
+        "selection": {
+            "event": [
+                {"type": "any", "branches": ["HLT_IsoMu24", "HLT_NotInThisEra_v7"]}
+            ]
+        },
+    },
+    {
+        "name": "ht-cut",
+        "branches": ["Jet_*", "nJet"],
+        "selection": {
+            "event": [
+                {
+                    "type": "ht",
+                    "collection": "Jet",
+                    "var": "pt",
+                    "object_cuts": [{"var": "pt", "op": ">", "value": 30.0}],
+                    "op": ">",
+                    "value": 150.0,
+                }
+            ]
+        },
+    },
+    {
+        "name": "mass-window",
+        "branches": ["Electron_*", "nElectron"],
+        "selection": {
+            "event": [
+                {
+                    "type": "mass",
+                    "collections": ["Electron", "Electron"],
+                    "window": [60.0, 120.0],
+                }
+            ]
+        },
+    },
+    {
+        "name": "delta-r",
+        "branches": ["Electron_*", "Jet_*"],
+        "selection": {
+            "event": [
+                {
+                    "type": "deltaR",
+                    "collections": ["Electron", "Jet"],
+                    "op": ">",
+                    "value": 0.4,
+                }
+            ]
+        },
+    },
+    {
+        "name": "expr",
+        "branches": ["MET_pt", "Jet_*", "nJet"],
+        "selection": {
+            "event": [
+                {
+                    "type": "expr",
+                    "expr": "MET_pt + 0.5*sum(Jet_pt)",
+                    "op": ">",
+                    "value": 100.0,
+                }
+            ]
+        },
+    },
+    {
+        "name": "kitchen-sink",
+        "branches": ["Electron_*", "Jet_*", "MET_*", "HLT_*"],
+        "cascade": True,
+        "selection": {
+            "preselection": [{"branch": "nElectron", "op": ">=", "value": 1}],
+            "object": [
+                {
+                    "collection": "Electron",
+                    "cuts": [{"var": "pt", "op": ">", "value": 15.0}],
+                    "min_count": 1,
+                }
+            ],
+            "event": [
+                {"type": "any", "branches": ["HLT_IsoMu24"]},
+                {"type": "cut", "branch": "MET_pt", "op": ">", "value": 20.0},
+                {
+                    "type": "ht",
+                    "collection": "Jet",
+                    "var": "pt",
+                    "object_cuts": [],
+                    "op": ">",
+                    "value": 50.0,
+                },
+                {
+                    "type": "expr",
+                    "expr": "abs(MET_pt - 10.0)",
+                    "op": ">",
+                    "value": 5.0,
+                },
+            ],
+        },
+    },
+    {
+        "name": "strict-variant",
+        "branches": ["MET_pt"],
+        "strict": True,
+        "selection": {
+            "event": [{"type": "any", "branches": ["HLT_IsoMu24"]}]
+        },
+    },
+    {
+        "name": "cascade-off-variant",
+        "branches": ["MET_pt"],
+        "cascade": False,
+        "selection": {
+            "preselection": [{"branch": "MET_pt", "op": ">", "value": 25.0}]
+        },
+    },
+]
+
+#: fixture-store shape (small but multi-window so pruning has spans)
+FIXTURE_STORE = {"n_events": 4096, "n_hlt": 8, "basket_events": 512, "seed": 7}
+FIXTURE_WINDOW_EVENTS = 1024
+
+
+def verify_fixtures() -> list[str]:
+    """Compile + plan + verify every fixture; returns failure strings."""
+    from repro.analysis.verify import VerifyError, verify_plan, verify_program
+    from repro.core.planner import plan_skim
+    from repro.core.query import parse_query
+    from repro.data.synth import make_nanoaod_like
+    from repro.kernels.predicate_eval import compile_query
+
+    store = make_nanoaod_like(**FIXTURE_STORE)
+    failures: list[str] = []
+    for doc in FIXTURE_QUERIES:
+        name = doc.get("name", "<unnamed>")
+        try:
+            query = parse_query({k: v for k, v in doc.items() if k != "name"})
+            program = compile_query(query)
+            verify_program(program)
+            plan = plan_skim(
+                query,
+                store,
+                window_events=FIXTURE_WINDOW_EVENTS,
+                prune=True,
+                cascade=doc.get("cascade", True),
+            )
+            verify_plan(plan, store)
+        except VerifyError as exc:
+            failures.append(f"{name}: {exc}")
+        except Exception as exc:  # noqa: BLE001 — report, don't crash the lint run
+            failures.append(f"{name}: {type(exc).__name__}: {exc}")
+    return failures

@@ -1,0 +1,403 @@
+"""skimlint rule catalog (DESIGN.md §15).
+
+Each rule encodes one invariant the repo previously enforced only by
+convention:
+
+==== =====================================================================
+D001 no wall-clock / sleep / unseeded randomness in ``src/repro`` —
+     modeled time flows through ``ManualClock`` and priced costs
+D002 no lock held across a ``yield`` in a generator (the streaming
+     executors suspend mid-iteration; a held lock is a deadlock/race)
+D003 determinism of hashing: ``json.dumps`` must pass ``sort_keys=True``,
+     and no set iteration inside hash/manifest/cache-key contexts
+D004 typed failure model in ``cluster/``/``serve/``: never raise bare
+     ``Exception``/``RuntimeError`` (use ``ClusterError`` subclasses,
+     ``CorruptBasket``, ``IntegrityError``, ``ServiceError``, ...)
+D005 every thread is named: ``threading.Thread`` needs ``name=``,
+     ``ThreadPoolExecutor`` needs ``thread_name_prefix=`` (PR 8's
+     ``skim-*`` convention — leaked threads must be identifiable)
+E001 no bare ``extras["..."]`` writes outside ``repro/obs/schema.py``
+     (the versioned report schema owns the extras key set)
+==== =====================================================================
+
+All rules are pure ``ast`` analyses — no imports of the linted code, no
+regex string matching (E001's old regex core matched inside strings and
+docstrings; the AST form cannot).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from tools.skimlint.core import Rule, rule
+
+# ---------------------------------------------------------------------------
+# name resolution through import aliases
+# ---------------------------------------------------------------------------
+
+
+class ImportMap:
+    """Canonical dotted names for expressions, through import aliases.
+
+    ``import numpy as np`` makes ``np.random.rand`` resolve to
+    ``numpy.random.rand``; ``from time import time as now`` makes
+    ``now`` resolve to ``time.time``.
+    """
+
+    def __init__(self, tree: ast.Module):
+        self.modules: dict[str, str] = {}  # alias -> module dotted name
+        self.members: dict[str, str] = {}  # alias -> module.member
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.modules[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0]
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    self.members[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, expr: ast.expr) -> str | None:
+        """Dotted canonical name of a Name/Attribute chain, or ``None``."""
+        parts: list[str] = []
+        while isinstance(expr, ast.Attribute):
+            parts.append(expr.attr)
+            expr = expr.value
+        if not isinstance(expr, ast.Name):
+            return None
+        parts.reverse()
+        base = expr.id
+        if base in self.modules:
+            return ".".join([self.modules[base], *parts])
+        if base in self.members:
+            return ".".join([self.members[base], *parts])
+        return ".".join([base, *parts])
+
+
+def _has_kwarg(call: ast.Call, name: str) -> bool:
+    return any(kw.arg == name for kw in call.keywords)
+
+
+def _kwarg_value(call: ast.Call, name: str) -> ast.expr | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _local_walk(fn: ast.AST):
+    """Walk a function body without descending into nested scopes."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _functions(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# D001 — modeled time, not wall-clock
+# ---------------------------------------------------------------------------
+
+#: unconditionally forbidden calls (wall-clock reads, sleeps, global-RNG
+#: draws).  ``time.perf_counter`` is deliberately absent: observed wall
+#: timings (extras["wall_s"], span stamps) are legitimate *measurements*;
+#: they must never feed modeled time or content addresses.
+_D001_FORBIDDEN = frozenset(
+    {
+        "time.time",
+        "time.time_ns",
+        "time.sleep",
+        "time.monotonic",
+        "time.monotonic_ns",
+        "datetime.datetime.now",
+        "datetime.datetime.utcnow",
+        "datetime.datetime.today",
+        "datetime.date.today",
+    }
+    | {
+        f"random.{fn}"
+        for fn in (
+            "random", "randint", "randrange", "uniform", "choice", "choices",
+            "shuffle", "sample", "gauss", "normalvariate", "expovariate",
+            "betavariate", "triangular", "getrandbits", "seed",
+        )
+    }
+    | {
+        f"numpy.random.{fn}"
+        for fn in (
+            "rand", "randn", "randint", "random", "uniform", "choice",
+            "shuffle", "normal", "permutation", "seed",
+        )
+    }
+)
+
+#: forbidden only when called with no arguments (argless = unseeded)
+_D001_NEEDS_SEED = frozenset({"random.Random", "numpy.random.default_rng"})
+
+
+@rule
+class WallClockRule(Rule):
+    id = "D001"
+    title = "wall-clock/sleep/unseeded randomness (modeled time only)"
+
+    def check(self, tree, source, path):
+        imports = ImportMap(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = imports.resolve(node.func)
+            if name is None:
+                continue
+            if name in _D001_FORBIDDEN:
+                yield self.finding(
+                    node, path,
+                    f"`{name}` — modeled time flows through ManualClock/"
+                    "priced costs; randomness must be seeded",
+                )
+            elif name in _D001_NEEDS_SEED and not node.args and not node.keywords:
+                yield self.finding(
+                    node, path, f"`{name}()` without a seed is nondeterministic"
+                )
+
+
+# ---------------------------------------------------------------------------
+# D002 — no lock held across a yield
+# ---------------------------------------------------------------------------
+
+_LOCKISH_NAME = re.compile(r"(?:^|_)(?:lock|mutex|cond|sem|semaphore)s?$", re.I)
+_LOCK_CTORS = frozenset(
+    f"threading.{n}"
+    for n in ("Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore")
+)
+
+
+def _is_lockish(expr: ast.expr, imports: ImportMap) -> bool:
+    if isinstance(expr, ast.Call):
+        name = imports.resolve(expr.func)
+        return name in _LOCK_CTORS
+    terminal = None
+    if isinstance(expr, ast.Attribute):
+        terminal = expr.attr
+    elif isinstance(expr, ast.Name):
+        terminal = expr.id
+    return terminal is not None and _LOCKISH_NAME.search(terminal) is not None
+
+
+@rule
+class LockAcrossYieldRule(Rule):
+    id = "D002"
+    title = "lock held across a generator yield"
+
+    def check(self, tree, source, path):
+        imports = ImportMap(tree)
+        for fn in _functions(tree):
+            local = list(_local_walk(fn))
+            if not any(isinstance(n, (ast.Yield, ast.YieldFrom)) for n in local):
+                continue  # not a generator
+            for node in local:
+                if not isinstance(node, (ast.With, ast.AsyncWith)):
+                    continue
+                if not any(_is_lockish(i.context_expr, imports) for i in node.items):
+                    continue
+                held = [
+                    n
+                    for stmt in node.body
+                    for n in ast.walk(stmt)
+                    if isinstance(n, (ast.Yield, ast.YieldFrom))
+                ]
+                if held:
+                    yield self.finding(
+                        node, path,
+                        f"generator `{fn.name}` yields while holding a lock — "
+                        "the consumer may never resume it (deadlock/race; "
+                        "snapshot under the lock, yield outside)",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# D003 — determinism of hashing
+# ---------------------------------------------------------------------------
+
+_HASH_CALLS = frozenset(
+    f"hashlib.{n}" for n in ("sha256", "sha1", "sha512", "md5", "blake2b", "new")
+) | {"zlib.crc32"}
+_HASH_CONTEXT = re.compile(
+    r"hash|manifest|cache_key|canonical|digest|content_addr|chrome_trace|trace_json",
+    re.I,
+)
+
+
+def _is_set_expr(expr: ast.expr) -> bool:
+    if isinstance(expr, (ast.Set, ast.SetComp)):
+        return True
+    return (
+        isinstance(expr, ast.Call)
+        and isinstance(expr.func, ast.Name)
+        and expr.func.id in ("set", "frozenset")
+    )
+
+
+@rule
+class HashDeterminismRule(Rule):
+    id = "D003"
+    title = "nondeterminism feeding a hash/manifest/cache key"
+
+    def check(self, tree, source, path):
+        imports = ImportMap(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if imports.resolve(node.func) != "json.dumps":
+                continue
+            sk = _kwarg_value(node, "sort_keys")
+            if sk is None:
+                yield self.finding(
+                    node, path,
+                    "`json.dumps` without `sort_keys=True` — dict order is "
+                    "construction order, not content (content addresses and "
+                    "manifests must not depend on it)",
+                )
+            elif isinstance(sk, ast.Constant) and sk.value is not True:
+                yield self.finding(
+                    node, path, "`json.dumps(sort_keys=False)` in a repo that hashes JSON"
+                )
+        # set iteration inside hash contexts: iteration order of a set is
+        # salted per-process, so anything it feeds is nondeterministic
+        for fn in _functions(tree):
+            local = list(_local_walk(fn))
+            hashy = _HASH_CONTEXT.search(fn.name) is not None or any(
+                isinstance(n, ast.Call)
+                and (imports.resolve(n.func) or "") in _HASH_CALLS
+                for n in local
+            )
+            if not hashy:
+                continue
+            iters: list[ast.expr] = []
+            for n in local:
+                if isinstance(n, (ast.For, ast.AsyncFor)):
+                    iters.append(n.iter)
+                elif isinstance(n, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)):
+                    iters.extend(g.iter for g in n.generators)
+            for it in iters:
+                if _is_set_expr(it):
+                    yield self.finding(
+                        it, path,
+                        f"iteration over a set inside hash context `{fn.name}` — "
+                        "sort it (`sorted(...)`) before it feeds a digest",
+                    )
+
+
+# ---------------------------------------------------------------------------
+# D004 — typed failure model in cluster/ and serve/
+# ---------------------------------------------------------------------------
+
+
+@rule
+class TypedFailureRule(Rule):
+    id = "D004"
+    title = "untyped raise in cluster/serve (use the typed failure model)"
+
+    def applies_to(self, path: str) -> bool:
+        parts = Path(path).parts
+        return "cluster" in parts or "serve" in parts
+
+    def check(self, tree, source, path):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Raise) or node.exc is None:
+                continue
+            exc = node.exc
+            name = None
+            if isinstance(exc, ast.Call) and isinstance(exc.func, ast.Name):
+                name = exc.func.id
+            elif isinstance(exc, ast.Name):
+                name = exc.id
+            if name in ("Exception", "RuntimeError", "BaseException"):
+                yield self.finding(
+                    node, path,
+                    f"bare `raise {name}` — cluster/serve failures are typed "
+                    "(ClusterError subclasses, CorruptBasket, IntegrityError, "
+                    "ServiceError) so callers can classify retry/degrade",
+                )
+
+
+# ---------------------------------------------------------------------------
+# D005 — every thread is named
+# ---------------------------------------------------------------------------
+
+
+@rule
+class NamedThreadRule(Rule):
+    id = "D005"
+    title = "unnamed thread (skim-* naming, DESIGN.md §14)"
+
+    def check(self, tree, source, path):
+        imports = ImportMap(tree)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = imports.resolve(node.func)
+            if name == "threading.Thread" and not _has_kwarg(node, "name"):
+                yield self.finding(
+                    node, path,
+                    "`threading.Thread` without `name=` — leaked/hung threads "
+                    "must be identifiable (use a `skim-*` name)",
+                )
+            elif name == "concurrent.futures.ThreadPoolExecutor" and not _has_kwarg(
+                node, "thread_name_prefix"
+            ):
+                yield self.finding(
+                    node, path,
+                    "`ThreadPoolExecutor` without `thread_name_prefix=` — "
+                    "pool workers must carry a `skim-*` name",
+                )
+
+
+# ---------------------------------------------------------------------------
+# E001 — extras writes go through the obs schema
+# ---------------------------------------------------------------------------
+
+
+def _extras_subscript(target: ast.expr) -> bool:
+    if not isinstance(target, ast.Subscript):
+        return False
+    value = target.value
+    if isinstance(value, ast.Name):
+        return value.id == "extras"
+    if isinstance(value, ast.Attribute):
+        return value.attr == "extras"
+    return False
+
+
+@rule
+class ExtrasWriteRule(Rule):
+    id = "E001"
+    title = "bare extras[...] write outside repro/obs/schema.py"
+
+    def applies_to(self, path: str) -> bool:
+        return not path.replace("\\", "/").endswith("obs/schema.py")
+
+    def check(self, tree, source, path):
+        for node in ast.walk(tree):
+            targets: list[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for t in targets:
+                if _extras_subscript(t):
+                    yield self.finding(
+                        node, path,
+                        "bare extras write — go through repro.obs.schema "
+                        "(SkimReport / make_extras), the one place the key "
+                        "set can grow",
+                    )

@@ -1,0 +1,217 @@
+"""Per-rule self-test corpus: violating, clean, and suppressed snippets.
+
+``python -m tools.skimlint --self-test`` runs every snippet through the
+framework and asserts the expected outcome, so a rule regression is
+caught by the tool itself (tests/test_skimlint.py drives the same corpus
+plus its own cases).  Every rule MUST ship at least one ``bad`` and one
+``good`` snippet; ``bad`` snippets with a suppression comment appear
+under ``suppressed``.
+"""
+
+from __future__ import annotations
+
+from tools.skimlint.core import all_rules, lint_source
+
+#: rule id -> {"bad": [...], "good": [...], "suppressed": [...]}
+#: ``path`` tunes rules scoped by directory (D004) / exemption (E001).
+CORPUS: dict[str, dict[str, list[str]]] = {
+    "D001": {
+        "bad": [
+            "import time\nt0 = time.time()\n",
+            "import time as t\nt.sleep(0.1)\n",
+            "from time import sleep\nsleep(1)\n",
+            "from datetime import datetime\nstamp = datetime.now()\n",
+            "import random\nx = random.random()\n",
+            "import random\nrng = random.Random()\n",
+            "import numpy as np\nrng = np.random.default_rng()\n",
+            "import numpy as np\nx = np.random.rand(3)\n",
+        ],
+        "good": [
+            "import time\nt0 = time.perf_counter()\n",
+            "import random\nrng = random.Random(1234)\n",
+            "import numpy as np\nrng = np.random.default_rng(0)\n",
+            "x = 'time.time() inside a string is fine'\n",
+        ],
+        "suppressed": [
+            "import time\nt0 = time.time()  # skimlint: ignore[D001]\n",
+        ],
+    },
+    "D002": {
+        "bad": [
+            (
+                "import threading\n"
+                "lock = threading.Lock()\n"
+                "def gen(items):\n"
+                "    with lock:\n"
+                "        for x in items:\n"
+                "            yield x\n"
+            ),
+            (
+                "class S:\n"
+                "    def iter_run(self):\n"
+                "        with self._lock:\n"
+                "            yield 1\n"
+            ),
+        ],
+        "good": [
+            (
+                "class S:\n"
+                "    def iter_run(self):\n"
+                "        with self._lock:\n"
+                "            snap = list(self._items)\n"
+                "        yield from snap\n"
+            ),
+            (
+                "class S:\n"
+                "    def run(self):\n"
+                "        with self._lock:\n"
+                "            return list(self._items)\n"
+            ),
+            (
+                "def gen(path):\n"
+                "    with open(path) as f:\n"
+                "        yield from f\n"
+            ),
+        ],
+        "suppressed": [
+            (
+                "class S:\n"
+                "    def iter_run(self):\n"
+                "        with self._lock:  # skimlint: ignore[D002]\n"
+                "            yield 1\n"
+            ),
+        ],
+    },
+    "D003": {
+        "bad": [
+            "import json\ndoc = json.dumps({'b': 1, 'a': 2})\n",
+            "import json\ndoc = json.dumps({'a': 1}, sort_keys=False)\n",
+            (
+                "import hashlib\n"
+                "def manifest_hash(names):\n"
+                "    h = hashlib.sha256()\n"
+                "    for n in set(names):\n"
+                "        h.update(n.encode())\n"
+                "    return h.hexdigest()\n"
+            ),
+            (
+                "import hashlib\n"
+                "def cache_key(parts):\n"
+                "    body = ','.join(p for p in {x.strip() for x in parts})\n"
+                "    return hashlib.sha256(body.encode()).hexdigest()\n"
+            ),
+        ],
+        "good": [
+            "import json\ndoc = json.dumps({'a': 1}, sort_keys=True)\n",
+            (
+                "import hashlib\n"
+                "def manifest_hash(names):\n"
+                "    h = hashlib.sha256()\n"
+                "    for n in sorted(set(names)):\n"
+                "        h.update(n.encode())\n"
+                "    return h.hexdigest()\n"
+            ),
+            (
+                "def plain_loop(names):\n"
+                "    out = 0\n"
+                "    for n in set(names):\n"
+                "        out += len(n)\n"
+                "    return out\n"
+            ),
+        ],
+        "suppressed": [
+            "import json\ndoc = json.dumps([1, 2])  # skimlint: ignore[D003]\n",
+        ],
+    },
+    "D004": {
+        "path": "src/repro/cluster/snippet.py",
+        "bad": [
+            "def f():\n    raise RuntimeError('shard failed')\n",
+            "def f():\n    raise Exception('boom')\n",
+        ],
+        "good": [
+            (
+                "class ClusterError(Exception):\n"
+                "    pass\n"
+                "def f():\n"
+                "    raise ClusterError('shard failed')\n"
+            ),
+            "def f():\n    raise ValueError('bad argument')\n",
+        ],
+        "suppressed": [
+            "def f():\n    raise RuntimeError('x')  # skimlint: ignore[D004]\n",
+        ],
+    },
+    "D005": {
+        "bad": [
+            "import threading\nt = threading.Thread(target=print)\n",
+            (
+                "from concurrent.futures import ThreadPoolExecutor\n"
+                "ex = ThreadPoolExecutor(max_workers=2)\n"
+            ),
+        ],
+        "good": [
+            "import threading\nt = threading.Thread(target=print, name='skim-io-0')\n",
+            (
+                "from concurrent.futures import ThreadPoolExecutor\n"
+                "ex = ThreadPoolExecutor(max_workers=2, thread_name_prefix='skim-gather')\n"
+            ),
+        ],
+        "suppressed": [
+            "import threading\nt = threading.Thread(target=print)  # skimlint: ignore[D005]\n",
+        ],
+    },
+    "E001": {
+        "bad": [
+            "def f(extras):\n    extras['phase1_bytes'] = 7\n",
+            "def f(res):\n    res.extras['windows'] += 1\n",
+            "def f(extras):\n    extras['flags'] |= 4\n",
+        ],
+        "good": [
+            "def f(extras):\n    x = extras['phase1_bytes']\n",
+            "def f(extras):\n    ok = 'windows' in extras\n",
+            "def f(extras):\n    y = extras.get('windows', 0)\n",
+            '"""docstring mentioning extras["key"] = value is not a write"""\n',
+        ],
+        "suppressed": [
+            "def f(extras):\n    extras['k'] = 1  # skimlint: ignore[E001]\n",
+        ],
+    },
+    "X001": {
+        "bad": [
+            "import time\nt0 = time.perf_counter()  # skimlint: ignore\n",
+        ],
+        "good": [
+            "import time\nt0 = time.perf_counter()  # plain comment\n",
+        ],
+        "suppressed": [],
+    },
+}
+
+
+def run_selftest() -> list[str]:
+    """Run the corpus; returns a list of failure descriptions (empty = pass)."""
+    failures: list[str] = []
+    for rid in sorted(set(CORPUS) | set(all_rules())):
+        cases = CORPUS.get(rid)
+        if cases is None:
+            failures.append(f"{rid}: rule has no self-test corpus entry")
+            continue
+        path = cases.get("path", ["src/repro/snippet.py"])
+        path = path if isinstance(path, str) else path[0]
+        for i, src in enumerate(cases.get("bad", ())):
+            res = lint_source(src, path=path)
+            if not any(f.rule == rid for f in res.findings):
+                failures.append(f"{rid} bad[{i}]: expected a finding, got none")
+        for i, src in enumerate(cases.get("good", ())):
+            res = lint_source(src, path=path)
+            hits = [f for f in res.findings if f.rule == rid]
+            if hits:
+                failures.append(f"{rid} good[{i}]: unexpected finding {hits[0].message!r}")
+        for i, src in enumerate(cases.get("suppressed", ())):
+            res = lint_source(src, path=path)
+            if any(f.rule == rid for f in res.findings):
+                failures.append(f"{rid} suppressed[{i}]: finding not suppressed")
+            if not any(f.rule == rid for f in res.suppressed):
+                failures.append(f"{rid} suppressed[{i}]: nothing recorded as suppressed")
+    return failures
