@@ -4,17 +4,27 @@
 PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
+# Benchmark-run environment (DESIGN.md §16): 64-bit jnp scalars so the
+# device tier matches the host codec bit-for-bit, a multi-device host
+# platform so batched dispatch exercises real device placement on CPU
+# containers, and tcmalloc preloaded when present (allocator jitter is
+# visible in realized `*/wall` rows on shared cores).
+TCMALLOC := $(firstword $(wildcard /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so* \
+	/usr/lib/x86_64-linux-gnu/libtcmalloc.so* /usr/lib/libtcmalloc_minimal.so*))
+BENCH_ENV := JAX_ENABLE_X64=1 XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	$(if $(TCMALLOC),LD_PRELOAD=$(TCMALLOC))
+
 .PHONY: test bench smoke chaos lint quickstart
 
 test:  ## tier-1 suite
 	$(PY) -m pytest -x -q
 
 bench:  ## full benchmark harness (CSV on stdout)
-	PYTHONPATH=src:. $(PY) benchmarks/run.py
+	PYTHONPATH=src:. $(BENCH_ENV) $(PY) benchmarks/run.py
 
-smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + service + obs + faults; the CI step).  Emits BENCH_<pr>.json + BENCH_<pr>_trace.json.
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --smoke --json \
-		--only pipeline,cluster,prune,expr,cascade,service,obs,faults
+smoke:  ## fast benchmark smoke (executor + cluster + pruning + expr + cascade + device + service + obs + faults; the CI step).  Emits BENCH_<pr>.json + BENCH_<pr>_trace.json.
+	PYTHONPATH=src:. $(BENCH_ENV) $(PY) benchmarks/run.py --smoke --json \
+		--only pipeline,cluster,prune,expr,cascade,device,service,obs,faults
 
 chaos:  ## seeded fault-injection sweep (tests/test_chaos.py)
 	$(PY) -m pytest -q -m chaos tests/test_chaos.py

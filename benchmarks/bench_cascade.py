@@ -75,7 +75,9 @@ QUERY = {
 }
 
 
-def _make_store(n_events: int, seed: int = 7) -> EventStore:
+def _make_store(
+    n_events: int, seed: int = 7, basket_events: int = BASKET
+) -> EventStore:
     """Conditions-era store: window w is a *good era* iff w % 4 == 0.
 
     Bad-era electrons have ``mvaId == (pt <= 20)`` — no object jointly
@@ -83,7 +85,7 @@ def _make_store(n_events: int, seed: int = 7) -> EventStore:
     stays undecidable (pt spans the threshold, mvaId holds both values).
     """
     rng = np.random.default_rng(seed)
-    era_good = (np.arange(n_events) // BASKET) % 4 == 0
+    era_good = (np.arange(n_events) // basket_events) % 4 == 0
 
     cols: dict[str, np.ndarray] = {}
     jagged: dict[str, str] = {}
@@ -116,7 +118,7 @@ def _make_store(n_events: int, seed: int = 7) -> EventStore:
     cols["luminosityBlock"] = (np.arange(n_events) // 1000).astype(np.int32)
 
     return EventStore.from_arrays(
-        cols, jagged=jagged, basket_events=BASKET, codec="bitpack"
+        cols, jagged=jagged, basket_events=basket_events, codec="bitpack"
     )
 
 

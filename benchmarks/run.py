@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows (per the harness contract).
              vs staged and pruned vs reference),
              bench_cascade (cascaded phase-1 execution vs the
              fused+pruned preload path),
+             bench_device (device-resident batched cascade: one
+             dispatch per window-batch, on-device basket decode,
+             survivor masks resident between stages),
              bench_service (async job service: time-to-first-partial
              vs blocking, admission pricing, queue throughput),
              bench_obs (trace/metrics layer: no-op tracer overhead
@@ -34,7 +37,11 @@ suite)::
 
 ``--json [PATH]`` additionally writes every emitted row — modeled times
 and bytes moved — to a machine-readable ``BENCH_<pr>.json`` (default
-name), the perf-trajectory artifact CI uploads per PR.
+name), the perf-trajectory artifact CI uploads per PR.  After writing,
+every realized ``*/wall`` row is compared against the latest committed
+``BENCH_<n>.json`` baseline; a >20% regression prints a loud warning
+(warning, not failure: realized walls on shared CI cores are noisy —
+the deterministic byte/identity contracts live in the benches).
 """
 
 from __future__ import annotations
@@ -43,6 +50,7 @@ import argparse
 import inspect
 import json
 import os
+import re
 import sys
 import time
 
@@ -51,8 +59,26 @@ import time
 # that just ran the test suite) cannot skew the modeled-vs-wall rows.
 os.environ["REPRO_VERIFY"] = "0"
 
-# the PR this tree's benchmark artifact belongs to (BENCH_<pr>.json)
-PR_NUMBER = 9
+# The PR this tree's benchmark artifact belongs to (BENCH_<pr>.json).
+# The ``PR_NUMBER`` env var overrides the in-tree value; an *empty*
+# override fails loudly in main() instead of silently skipping the
+# artifact (the PR-9 trajectory gap: no BENCH_9.json was ever emitted).
+PR_NUMBER: str | int | None = os.environ.get("PR_NUMBER", 10)
+
+
+def resolve_pr_number() -> int:
+    """The artifact's PR number, or a loud SystemExit when unset."""
+    raw = PR_NUMBER
+    if raw is None or str(raw).strip() == "":
+        raise SystemExit(
+            "PR_NUMBER is unset: benchmarks/run.py cannot name its "
+            "BENCH_<pr>.json artifact.  Set the PR_NUMBER env var (CI) or "
+            "the in-tree default in benchmarks/run.py."
+        )
+    try:
+        return int(str(raw).strip())
+    except ValueError:
+        raise SystemExit(f"PR_NUMBER={raw!r} is not an integer")
 
 
 def _modules() -> list[tuple[str, str, str]]:
@@ -68,6 +94,7 @@ def _modules() -> list[tuple[str, str, str]]:
         ("prune", "bench_prune", "zone-map predicate pushdown"),
         ("expr", "bench_expr", "derived-expression tier"),
         ("cascade", "bench_cascade", "cascaded phase-1 execution"),
+        ("device", "bench_device", "device-resident batched cascade"),
         ("service", "bench_service", "async skim job service"),
         ("obs", "bench_obs", "trace/metrics layer"),
         ("faults", "bench_faults", "fault tolerance: hedging + checksums"),
@@ -87,6 +114,63 @@ def _parse_names(raw: str | None, known: list[str]) -> set[str]:
     return names
 
 
+#: regression threshold for realized ``*/wall`` rows vs the committed
+#: baseline artifact (warn-only: shared-core walls are noisy)
+WALL_REGRESSION = 0.20
+
+
+def _wall_rows(doc: dict) -> dict[str, float]:
+    """``name -> value`` for every realized ``*/wall`` row in a BENCH doc."""
+    rows: dict[str, float] = {}
+    for mod in doc.get("benchmarks", {}).values():
+        for row in mod.get("rows", ()):
+            name = row.get("name", "")
+            if name.endswith("/wall"):
+                rows[name] = float(row["value"])
+    return rows
+
+
+def _latest_baseline(pr: int) -> tuple[str, dict] | None:
+    """The committed ``BENCH_<n>.json`` with the highest ``n`` below the
+    current PR (trace exports and the artifact being written excluded)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    best: tuple[int, str] | None = None
+    for fname in os.listdir(root):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", fname)
+        if not m or int(m.group(1)) >= pr:
+            continue
+        if best is None or int(m.group(1)) > best[0]:
+            best = (int(m.group(1)), fname)
+    if best is None:
+        return None
+    with open(os.path.join(root, best[1])) as fh:
+        return best[1], json.load(fh)
+
+
+def compare_walls(doc: dict, pr: int) -> list[str]:
+    """Warn-lines for realized ``*/wall`` rows that regressed >20% vs the
+    latest committed baseline artifact (empty list = clean)."""
+    base = _latest_baseline(pr)
+    if base is None:
+        return []
+    base_name, base_doc = base
+    if bool(base_doc.get("smoke")) != bool(doc.get("smoke")):
+        return []  # smoke and full walls are not comparable
+    baseline = _wall_rows(base_doc)
+    warnings: list[str] = []
+    for name, value in sorted(_wall_rows(doc).items()):
+        ref = baseline.get(name)
+        if ref is None or ref <= 0:
+            continue
+        if value > ref * (1.0 + WALL_REGRESSION):
+            warnings.append(
+                f"# WARN wall regression: {name} {value:.1f}us vs "
+                f"{ref:.1f}us in {base_name} (+{(value / ref - 1) * 100:.0f}%,"
+                f" threshold +{WALL_REGRESSION * 100:.0f}%)"
+            )
+    return warnings
+
+
 def main(argv: list[str] | None = None) -> None:
     known = [name for name, _, _ in _modules()]
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -97,12 +181,13 @@ def main(argv: list[str] | None = None) -> None:
         help="pass smoke mode (shrunken store) to modules that support it",
     )
     ap.add_argument(
-        "--json", nargs="?", const=f"BENCH_{PR_NUMBER}.json", default=None,
-        metavar="PATH",
+        "--json", nargs="?", const="", default=None, metavar="PATH",
         help="write the emitted rows as machine-readable JSON "
-        f"(default path: BENCH_{PR_NUMBER}.json)",
+        "(default path: BENCH_<pr>.json from PR_NUMBER)",
     )
     args = ap.parse_args(argv)
+    if args.json is not None and not args.json:
+        args.json = f"BENCH_{resolve_pr_number()}.json"
     only = _parse_names(args.only, known)
     skip = _parse_names(args.skip, known)
     if only & skip:
@@ -137,8 +222,9 @@ def main(argv: list[str] | None = None) -> None:
     print(f"# total {total_s:.1f}s", file=sys.stderr)
 
     if args.json:
+        pr = resolve_pr_number()
         doc = {
-            "pr": PR_NUMBER,
+            "pr": pr,
             "smoke": bool(args.smoke),
             "total_wall_s": total_s,
             "benchmarks": per_module,
@@ -146,6 +232,8 @@ def main(argv: list[str] | None = None) -> None:
         with open(args.json, "w") as fh:
             json.dump(doc, fh, indent=2)
         print(f"# wrote {args.json}", file=sys.stderr)
+        for line in compare_walls(doc, pr):
+            print(line, file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -404,9 +404,72 @@ def verify_cache_key_coverage() -> None:
         )
 
 
+def verify_device_batch(
+    spans,
+    pad_E: int,
+    pad_B: int,
+    nb: int,
+    basket_events: int,
+    mask_words: int,
+) -> None:
+    """Prove one window-batch's tiling invariants (DESIGN.md §16).
+
+    The batched cascade stages windows into a single (B, ..., pad_E, K)
+    tensor and carries survivor masks as (B, pad_E/32) uint32 words; a
+    pad shape that fails to cover a member window silently truncates its
+    tail events, and a basket-axis (``nb``) too small for the window's
+    global basket grid folds distinct baskets onto one alive bit —
+    phase 2 would then re-fetch (or worse, skip) the wrong baskets.
+    """
+    if pad_E % 32 != 0:
+        raise VerifyError(
+            "batch-pad-alignment",
+            f"pad_E={pad_E} is not a multiple of 32 — the bit-packed "
+            "survivor words cannot tile the event axis",
+        )
+    if mask_words * 32 != pad_E:
+        raise VerifyError(
+            "batch-mask-width",
+            f"packed mask carries {mask_words} words = {mask_words * 32} "
+            f"events but the batch is padded to pad_E={pad_E}",
+        )
+    if len(spans) > pad_B:
+        raise VerifyError(
+            "batch-window-overflow",
+            f"{len(spans)} member windows exceed the padded batch "
+            f"size pad_B={pad_B}",
+        )
+    for start, stop in spans:
+        m = stop - start
+        if m > pad_E:
+            raise VerifyError(
+                "batch-pad-coverage",
+                f"window [{start}, {stop}) has {m} events but the batch "
+                f"is padded to pad_E={pad_E} — tail events would be "
+                "silently truncated",
+            )
+        grid0 = start - start % basket_events
+        last_id = (stop - 1 - grid0) // basket_events
+        if last_id >= nb:
+            raise VerifyError(
+                "batch-basket-coverage",
+                f"window [{start}, {stop}) spans basket ordinal "
+                f"{last_id} on the global grid but the alive-bit axis "
+                f"holds only nb={nb} baskets",
+            )
+
+
 # ---------------------------------------------------------------------------
 # env-gated hooks (compile_query / plan_skim call these)
 # ---------------------------------------------------------------------------
+
+
+def maybe_verify_device_batch(
+    spans, pad_E, pad_B, nb, basket_events, mask_words
+) -> None:
+    """``verify_device_batch`` iff ``REPRO_VERIFY`` is on."""
+    if verify_enabled():
+        verify_device_batch(spans, pad_E, pad_B, nb, basket_events, mask_words)
 
 
 def maybe_verify_program(program) -> None:

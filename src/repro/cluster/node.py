@@ -103,6 +103,8 @@ class StorageNode:
         pipeline: bool | str = True,
         prune: bool = True,
         cascade: bool = True,
+        device_batch: int | None = None,
+        fused_backend: str | None = None,
     ):
         self.shard = shard
         self.node_id = shard.shard_id if node_id is None else node_id
@@ -120,6 +122,8 @@ class StorageNode:
             near_input_link=near_input_link,
             prune=prune,
             cascade=cascade,
+            device_batch=device_batch,
+            fused_backend=fused_backend,
         )
         self.shared_engine = SharedScanEngine(
             shard.store,
@@ -129,6 +133,8 @@ class StorageNode:
             fused=fused,
             prune=prune,
             cascade=cascade,
+            device_batch=device_batch,
+            fused_backend=fused_backend,
         )
         self._faults: list[_Fault] = []
         self.requests_served = 0

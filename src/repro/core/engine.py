@@ -221,12 +221,21 @@ def _decode_branches(
     fsid = tr.begin("fetch", kind="fetch", branches=len(order))
     window = store.fetch_window(order, start, stop, stats=stats, coalesce=coalesce)
     tr.end(fsid, bytes=stats.bytes_fetched)
-    dsid = tr.begin("decode", kind="decode")
+    # decode spans name their tier: "decode_device" when the store's
+    # backend-selected batch decode runs on the accelerator (bitpack
+    # planes crossing the host->device boundary compressed, DESIGN.md §16)
+    dkind = (
+        "decode_device"
+        if store.resolved_decode_backend() == "device"
+        and store.codec == "bitpack"
+        else "decode"
+    )
+    dsid = tr.begin("decode", kind=dkind)
     for name in order:
         blobs = window[name]
         parts = []
         with _Timer(breakdown, "decompress"):
-            decoded = [store.decode_blob(name, blob) for _, blob in blobs]
+            decoded = store.decode_blobs(name, [blob for _, blob in blobs])
         with _Timer(breakdown, "deserialize"):
             br = store.branches[name]
             for (meta, _), vals in zip(blobs, decoded):
@@ -442,6 +451,8 @@ class SkimEngine:
         prune: bool = True,
         cascade: bool = True,
         tracer=None,
+        device_batch: int | None = None,
+        fused_backend: str | None = None,
     ):
         self.store = store
         self.input_link = input_link
@@ -469,6 +480,18 @@ class SkimEngine:
         # default span sink (repro.obs.trace); the no-op tracer unless a
         # caller opts in — per-call ``tracer=`` overrides take precedence
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # device-resident batched cascade (DESIGN.md §16): group this many
+        # cascaded SCAN windows per device dispatch — O(windows/B) stage
+        # dispatches instead of O(windows), with survivor masks living on
+        # device between stages.  ``None``/1 keeps the per-window path.
+        if device_batch is not None and int(device_batch) < 1:
+            raise ValueError(f"device_batch must be >= 1, got {device_batch}")
+        self.device_batch = int(device_batch) if device_batch else None
+        # forced fused-evaluator backend ("pallas"/"xla"/"host"); ``None``
+        # resolves per backend (pallas on TPU, host interpreter elsewhere)
+        if fused_backend not in (None, "pallas", "xla", "host"):
+            raise ValueError(f"unknown fused backend {fused_backend!r}")
+        self.fused_backend = fused_backend
 
     # -- public API ----------------------------------------------------------
 
@@ -654,11 +677,17 @@ class SkimEngine:
         # adaptive stage order; the prefetcher loads only the pinned head
         # stage, later stages fetch alive baskets on demand
         cascade_exec = None
+        dispatches0 = None
+        if fused:
+            from repro.kernels.ops import dispatch_stats
+
+            dispatches0 = dispatch_stats()["dispatches"]
         if fused and plan.cascade is not None:
             from repro.core.plan import CascadeExecutor, mark_fetched
 
             cascade_exec = CascadeExecutor(
-                plan, store, coalesce=coalesce, tracer=tracer
+                plan, store, coalesce=coalesce, tracer=tracer,
+                backend=self.fused_backend,
             )
         use_threads = prefetch == "threads"
         preload = fused or bool(prefetch)
@@ -729,6 +758,59 @@ class SkimEngine:
                 for start in range(0, n, chunk):
                     yield start, min(start + chunk, n), None
 
+        # device-batched cascade grouping (DESIGN.md §16): consume SCAN
+        # windows in groups of ``device_batch``, run the cascade ONCE per
+        # group (one device dispatch per stage per group, survivor masks
+        # device-resident between stages), then replay the precomputed
+        # outcomes through the unchanged per-window ledger loop below.
+        # Zone-map decided windows pass through unbatched — they never
+        # evaluate the cascade at all.
+        batch_n = self.device_batch if cascade_exec is not None else None
+        pending: dict[int, tuple] = {}
+
+        def window_items():
+            src = enumerate(windows())
+            if not batch_n or batch_n <= 1:
+                yield from src
+                return
+            buf: list = []
+
+            def flush():
+                if not buf:
+                    return
+                entries, metas = [], []
+                for _wi, (start_, stop_, preloaded_) in buf:
+                    wb_, w1s_, ledger_ = Breakdown(), FetchStats(), {}
+                    mark_fetched(
+                        store, cascade_exec.head_branches, start_, stop_,
+                        ledger_,
+                    )
+                    entries.append(
+                        (start_, stop_, preloaded_, wb_, w1s_, ledger_)
+                    )
+                    metas.append((wb_, w1s_, ledger_))
+                outs = cascade_exec.run_window_batch(entries, pad_B=batch_n)
+                for (_wi, _win), out, meta in zip(buf, outs, metas):
+                    pending[_wi] = (out, *meta)
+                items = list(buf)
+                buf.clear()
+                yield from items
+
+            for item in src:
+                kind_ = (
+                    decisions[item[0]].decision
+                    if decisions is not None
+                    else SCAN
+                )
+                if kind_ == SCAN:
+                    buf.append(item)
+                    if len(buf) == batch_n:
+                        yield from flush()
+                else:
+                    yield from flush()
+                    yield item
+            yield from flush()
+
         # per-window survivor ledger: (start, stop, n_passed) for EVERY
         # window, survivors or not — the mergeable-result contract the
         # cluster coordinator splits shard outputs with (DESIGN.md §5)
@@ -737,7 +819,7 @@ class SkimEngine:
         pad_K = 0  # grows monotonically so padded shapes (and compiled
         # kernels) stay stable across windows once the max multiplicity
         # has been seen
-        for wi, (start, stop, preloaded) in enumerate(windows()):
+        for wi, (start, stop, preloaded) in window_items():
             m = stop - start
             dec = decisions[wi] if decisions is not None else None
             kind = dec.decision if dec is not None else SCAN
@@ -778,12 +860,20 @@ class SkimEngine:
                 # cheapest-and-most-selective-first; stage k fetches its
                 # branches only for baskets still alive after stage k-1 ----
                 loaded = {}
-                mark_fetched(
-                    store, cascade_exec.head_branches, start, stop, ledger
-                )
-                outcome = cascade_exec.run_window(
-                    start, stop, preloaded, wb, w1s, ledger=ledger
-                )
+                if wi in pending:
+                    # batched path: the cascade already ran for this
+                    # window's group — adopt its outcome and per-window
+                    # ledgers (byte/time accounting is window-local in
+                    # the batch too, so totals match the per-window path)
+                    outcome, cwb, w1s, ledger = pending.pop(wi)
+                    wb.merge(cwb)
+                else:
+                    mark_fetched(
+                        store, cascade_exec.head_branches, start, stop, ledger
+                    )
+                    outcome = cascade_exec.run_window(
+                        start, stop, preloaded, wb, w1s, ledger=ledger
+                    )
                 mask = outcome.mask
                 stats.merge(w1s)
             elif fused:
@@ -810,6 +900,7 @@ class SkimEngine:
                             payload_branches=plan.payload_branches,
                             K=pad_K,
                             pad_to=chunk,
+                            backend=self.fused_backend,
                         )
                     tracer.end(ksid)
             else:
@@ -886,7 +977,9 @@ class SkimEngine:
             b.merge(wb)
             phase2_stats.merge(w2s)
             if win_records:
-                win_records[-1].update(
+                # indexed by window (not [-1]): batched grouping consumes
+                # load records ahead of the processing loop
+                win_records[wi].update(
                     {
                         "proc_compute": wb.decompress + wb.deserialize + wb.filter,
                         # cascaded stage fetches are non-overlapped fetch in
@@ -963,6 +1056,15 @@ class SkimEngine:
             report.cascade_order = cascade_exec.order()
             report.cascade_stages = cascade_exec.state.report()
             report.cascade_bytes_skipped = stats.cascade_bytes_skipped
+        if dispatches0 is not None:
+            from repro.kernels.ops import dispatch_stats
+
+            report.device_dispatches = (
+                dispatch_stats()["dispatches"] - dispatches0
+            )
+            report.decode_backend = store.resolved_decode_backend()
+            if batch_n:
+                report.device_batch = batch_n
         if win_records:
             # exact double-buffered schedule from the per-window records
             # (what the threaded prefetcher realizes on capable hosts)
@@ -990,8 +1092,13 @@ def run_skim(
     pipeline: bool | str | None = None,
     prune: bool | None = None,
     cascade: bool | None = None,
+    device_batch: int | None = None,
+    fused_backend: str | None = None,
 ) -> SkimResult:
-    return SkimEngine(store, input_link, output_link).run(
+    return SkimEngine(
+        store, input_link, output_link,
+        device_batch=device_batch, fused_backend=fused_backend,
+    ).run(
         query, mode, fused=fused, pipeline=pipeline, prune=prune,
         cascade=cascade,
     )

@@ -66,6 +66,7 @@ def build_padded_inputs(
     K: int = 8,
     payload_branches: list[str] | None = None,
     include_index: bool = False,
+    to_device: bool = True,
 ) -> PaddedBatch:
     """Build dense kernel inputs from columnar (host) data.
 
@@ -166,6 +167,13 @@ def build_padded_inputs(
     else:
         payload = np.zeros((n_events, 1), np.float32)
 
+    if not to_device:
+        # batched staging keeps host buffers: the caller places windows at
+        # span offsets inside a batch tensor and ships the batch once
+        return PaddedBatch(
+            terms=terms, valid=valid, weights=weights,
+            payload=payload, n_events=n_events,
+        )
     return PaddedBatch(
         terms=jnp.asarray(terms),
         valid=jnp.asarray(valid),

@@ -264,6 +264,42 @@ def decode_basket(blob: bytes, codec: str, dtype) -> np.ndarray:
     return CODECS[codec][1](blob, dtype)
 
 
+def decode_basket_batch(
+    blobs: list, codec: str, dtype, backend: str = "host"
+) -> list:
+    """Decode a list of basket blobs in one round (DESIGN.md §16).
+
+    ``backend="host"`` (or any codec without a device decode) loops the
+    host reference decoder.  ``backend="device"`` with the ``bitpack``
+    codec ships the compressed *plane words* — not decoded columns —
+    across the host→device boundary and decodes them on the kernel tier
+    (``repro.kernels.ops.basket_decode_batch``: the Pallas kernel on
+    TPU, its jitted jnp mirror elsewhere), grouped by codec kind so each
+    group is one dispatch.  Output order matches ``blobs`` and is
+    bit-identical to the host reference for every kind (int zigzag-delta
+    prefix sums are wrap-exact int32, float prefix-xor is exact, bools
+    and raw literals are identity).
+    """
+    if backend != "device" or codec != "bitpack":
+        decode = CODECS[codec][1]
+        return [decode(blob, dtype) for blob in blobs]
+    from repro.kernels import ops
+
+    parts = [bitpack_raw_parts(blob) for blob in blobs]
+    out: list = [None] * len(blobs)
+    groups: dict[int, list[int]] = {}
+    for i, p in enumerate(parts):
+        if p["n"] == 0:
+            out[i] = np.empty(0, dtype=dtype)
+        else:
+            groups.setdefault(p["kind"], []).append(i)
+    for _kind, idxs in sorted(groups.items()):
+        decoded = ops.basket_decode_batch([parts[i] for i in idxs], dtype)
+        for i, vals in zip(idxs, decoded):
+            out[i] = np.asarray(vals)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # integrity digests (computed at encode time, stored in BasketMeta)
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ from repro.data.codecs import (
     basket_digest,
     basket_stats,
     decode_basket,
+    decode_basket_batch,
     encode_basket,
 )
 
@@ -296,9 +297,23 @@ class EventStore:
         codec: str = "bitpack",
         decode_cache_baskets: int = DECODE_CACHE_BASKETS,
         verify: bool = True,
+        decode_backend: str | None = None,
     ):
         self.basket_events = int(basket_events)
         self.codec = codec
+        # basket decode tier (DESIGN.md §16): "host" runs the numpy codec
+        # reference, "device" ships compressed plane words to the kernel
+        # tier (bitpack only; bit-identical by contract).  None resolves
+        # lazily — device iff a TPU backend is present, host otherwise —
+        # and any device failure falls back to host, counted in
+        # ``decode_fallbacks`` so the degradation is test-visible.
+        if decode_backend not in (None, "host", "device"):
+            raise ValueError(f"unknown decode_backend {decode_backend!r}")
+        self.decode_backend = decode_backend
+        self._decode_backend_resolved: str | None = None
+        self.decode_device_baskets = 0
+        self.decode_host_baskets = 0
+        self.decode_fallbacks = 0
         # enforce basket digests on every fetch (INTEGRITY_VERSION);
         # ``False`` restores the unverified fast path for A/B costing
         # (benchmarks/bench_faults.py pins the overhead under 2%)
@@ -331,6 +346,7 @@ class EventStore:
         jagged: dict[str, str] | None = None,
         basket_events: int = 4096,
         codec: str = "bitpack",
+        decode_backend: str | None = None,
     ) -> "EventStore":
         """Build a store.
 
@@ -339,7 +355,11 @@ class EventStore:
         counts branch (itself a flat integer column in ``columns``).
         """
         jagged = jagged or {}
-        store = cls(basket_events=basket_events, codec=codec)
+        store = cls(
+            basket_events=basket_events,
+            codec=codec,
+            decode_backend=decode_backend,
+        )
 
         flat_names = [n for n in columns if n not in jagged]
         if not flat_names:
@@ -650,6 +670,51 @@ class EventStore:
                 stats.merge(local)
         return out
 
+    def resolved_decode_backend(self) -> str:
+        """The decode tier actually in use: the configured backend, or
+        (when unset) device iff an accelerator backend is present."""
+        if self._decode_backend_resolved is None:
+            backend = self.decode_backend
+            if backend is None:
+                try:
+                    import jax
+
+                    backend = (
+                        "device" if jax.default_backend() == "tpu" else "host"
+                    )
+                except Exception:
+                    backend = "host"
+            self._decode_backend_resolved = backend
+        return self._decode_backend_resolved
+
+    def _decode_batch(self, name: str, blobs: list, dtype) -> list:
+        """Backend-dispatched decode of one branch's blobs (no cache).
+
+        The device tier covers the bitpack codec only; other codecs (and
+        any device-path failure) fall back to the host reference, counted
+        in ``decode_fallbacks``.  Both tiers are bit-identical by the
+        codec contract (pinned in tests/test_device_batch.py)."""
+        backend = self.resolved_decode_backend()
+        if backend == "device" and blobs:
+            if self.codec == "bitpack":
+                try:
+                    vals = decode_basket_batch(
+                        blobs, self.codec, dtype, backend="device"
+                    )
+                except Exception:
+                    with self._decode_lock:
+                        self.decode_fallbacks += len(blobs)
+                else:
+                    with self._decode_lock:
+                        self.decode_device_baskets += len(blobs)
+                    return vals
+            else:
+                with self._decode_lock:
+                    self.decode_fallbacks += len(blobs)
+        with self._decode_lock:
+            self.decode_host_baskets += len(blobs)
+        return [decode_basket(blob, self.codec, dtype) for blob in blobs]
+
     def decode_blob(self, name: str, blob: bytes) -> np.ndarray:
         """Decode one basket blob, memoized through a small per-store LRU.
 
@@ -660,27 +725,58 @@ class EventStore:
         the :class:`WindowPrefetcher` worker decodes concurrently with the
         consumer's phase 2.
         """
+        return self.decode_blobs(name, [blob])[0]
+
+    def decode_blobs(self, name: str, blobs: list) -> list:
+        """Decode a list of basket blobs for one branch in one round.
+
+        The batch form of :meth:`decode_blob` (same LRU, same freezing):
+        cache misses decode together through the backend-selected tier
+        (:meth:`_decode_batch`), so a device-backed store pays one kernel
+        dispatch per fetch round instead of one per basket.
+        """
+        dtype = self.branches[name].np_dtype()
         if self.decode_cache_baskets <= 0:
-            return decode_basket(blob, self.codec, self.branches[name].np_dtype())
-        key = (name, blob)
+            return self._decode_batch(name, list(blobs), dtype)
+        out: list = [None] * len(blobs)
+        misses: list[int] = []
         with self._decode_lock:
-            cached = self._decode_cache.get(key)
-            if cached is not None:
-                self._decode_cache.move_to_end(key)
-                self.decode_cache_hits += 1
-                self.decode_cache_hit_bytes += cached.nbytes
-                return cached
-            self.decode_cache_misses += 1
-        vals = decode_basket(blob, self.codec, self.branches[name].np_dtype())
-        if vals.flags.writeable:
-            vals.flags.writeable = False
+            for i, blob in enumerate(blobs):
+                cached = self._decode_cache.get((name, blob))
+                if cached is not None:
+                    self._decode_cache.move_to_end((name, blob))
+                    self.decode_cache_hits += 1
+                    self.decode_cache_hit_bytes += cached.nbytes
+                    out[i] = cached
+                else:
+                    self.decode_cache_misses += 1
+                    misses.append(i)
+        if misses:
+            decoded = self._decode_batch(
+                name, [blobs[i] for i in misses], dtype
+            )
+            with self._decode_lock:
+                for i, vals in zip(misses, decoded):
+                    if vals.flags.writeable:
+                        vals.flags.writeable = False
+                    self.decode_cache_miss_bytes += vals.nbytes
+                    self._decode_cache[(name, blobs[i])] = vals
+                    self._decode_cache.move_to_end((name, blobs[i]))
+                    out[i] = vals
+                while len(self._decode_cache) > self.decode_cache_baskets:
+                    self._decode_cache.popitem(last=False)
+        return out
+
+    def decode_backend_stats(self) -> dict:
+        """Decode-tier ledger: which tier decoded how many baskets, and
+        how many device requests degraded to the host reference."""
         with self._decode_lock:
-            self.decode_cache_miss_bytes += vals.nbytes
-            self._decode_cache[key] = vals
-            self._decode_cache.move_to_end(key)
-            while len(self._decode_cache) > self.decode_cache_baskets:
-                self._decode_cache.popitem(last=False)
-        return vals
+            return {
+                "backend": self.resolved_decode_backend(),
+                "device_baskets": self.decode_device_baskets,
+                "host_baskets": self.decode_host_baskets,
+                "fallbacks": self.decode_fallbacks,
+            }
 
     def decode_cache_stats(self) -> dict:
         with self._decode_lock:

@@ -66,6 +66,48 @@ def _decode_kernel(planes_ref, first_ref, out_ref, *, kind: int, n_bits: int):
     )
 
 
+@functools.partial(jax.jit, static_argnames=("kind", "n_bits", "out_dtype"))
+def basket_decode_ref(
+    planes: jnp.ndarray,
+    firsts: jnp.ndarray,
+    *,
+    kind: int,
+    n_bits: int,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Jitted jnp mirror of the Pallas decode kernel (the XLA device tier).
+
+    Same bit-extract + inverse-transform body as :func:`_decode_kernel`,
+    vectorized over the basket axis — this is what backs the device
+    decode path on hosts without a TPU (``repro.kernels.ops
+    .basket_decode_batch``), and it is bit-identical to the host codec:
+    the int path is a wrap-exact int32 prefix sum, the float path an
+    exact prefix xor, bools an identity.
+    """
+    N, B, W = planes.shape
+    V = W * 32
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    codes = jnp.zeros((N, V), dtype=jnp.uint32)
+    for j in range(n_bits):
+        bits = (planes[:, j, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+        codes = codes | (bits.reshape(N, V) << jnp.uint32(j))
+
+    if kind == KIND_BOOL:
+        return codes.astype(out_dtype)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (N, V), 1)
+    if kind == KIND_INT:
+        dec = (codes >> 1).astype(jnp.int32) ^ -(codes & 1).astype(jnp.int32)
+        first = jax.lax.bitcast_convert_type(
+            firsts.astype(jnp.uint32), jnp.int32
+        )
+        dec = jnp.where(pos == 0, first[:, None], dec)
+        return _log_scan(dec, jnp.add).astype(out_dtype)
+    # KIND_FLOAT: prefix-xor then bitcast
+    codes = jnp.where(pos == 0, firsts.astype(jnp.uint32)[:, None], codes)
+    acc = _log_scan(codes, jnp.bitwise_xor)
+    return jax.lax.bitcast_convert_type(acc, jnp.float32).astype(out_dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("kind", "n_bits", "out_dtype", "interpret")
 )

@@ -236,6 +236,51 @@ def _predicate_kernel(terms_ref, valid_ref, weights_ref, out_ref, *, program: Pr
     out_ref[...] = mask.astype(jnp.int32)
 
 
+def _predicate_kernel_batched(terms_ref, valid_ref, weights_ref, out_ref,
+                              *, program: Program):
+    """Window-batched body: blocks carry a leading window dim of 1."""
+    mask = predicate_mask(
+        program, terms_ref[0], valid_ref[0], weights_ref[0]
+    )
+    out_ref[0] = mask.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))
+def predicate_eval_batch(
+    terms: jnp.ndarray,
+    valid: jnp.ndarray,
+    weights: jnp.ndarray,
+    *,
+    program: Program,
+    interpret: bool = True,
+    event_tile: int = EVENT_TILE,
+) -> jnp.ndarray:
+    """Window-batched predicate evaluation: ONE dispatch per batch.
+
+    ``terms`` (B, T, E, K), ``valid``/``weights`` (B, G, E, K); the grid
+    runs (B, E/tile) with the window axis outermost.  Returns (B, E)
+    int32 survivor masks — the device-resident mask source of the
+    batched cascade (DESIGN.md §16).
+    """
+    Bn, T, E, K = terms.shape
+    G = valid.shape[1]
+    assert E % event_tile == 0, (E, event_tile)
+    grid = (Bn, E // event_tile)
+
+    return pl.pallas_call(
+        functools.partial(_predicate_kernel_batched, program=program),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, event_tile, K), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, G, event_tile, K), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, G, event_tile, K), lambda b, i: (b, 0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, event_tile), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((Bn, E), jnp.int32),
+        interpret=interpret,
+    )(terms, valid, weights)
+
+
 @functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))
 def predicate_eval(
     terms: jnp.ndarray,

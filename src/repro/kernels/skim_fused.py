@@ -76,6 +76,67 @@ def stitch_tiles(packed_tiles, counts, *, event_tile: int):
     return out[:E]
 
 
+def _fused_kernel_batched(terms_ref, valid_ref, weights_ref, payload_ref,
+                          out_ref, count_ref, *, program: Program):
+    """Window-batched body: blocks carry a leading window dim of 1 (the
+    outer grid axis); the evaluation is the same shared predicate +
+    one-hot compaction as :func:`_fused_kernel`."""
+    Eb = payload_ref.shape[1]
+    mask = predicate_mask(
+        program, terms_ref[0], valid_ref[0], weights_ref[0]
+    )
+    maskf = mask.astype(jnp.float32)
+    pos = jnp.cumsum(maskf) - maskf
+    rows = jax.lax.broadcasted_iota(jnp.float32, (Eb, Eb), 0)
+    onehot = (rows == pos[None, :]) & mask[None, :]
+    out_ref[0] = jnp.dot(
+        onehot.astype(jnp.float32),
+        payload_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+    count_ref[0, 0] = mask.astype(jnp.int32).sum()
+
+
+@functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))
+def skim_fused_batch(terms, valid, weights, payload, *, program: Program,
+                     interpret: bool = True, event_tile: int = EVENT_TILE):
+    """Window-batched one-pass skim: ONE dispatch for a whole batch of
+    padded windows (DESIGN.md §16).
+
+    Inputs carry a leading window axis — terms (B,T,E,K), valid/weights
+    (B,G,E,K), payload (B,E,D) — and the grid runs (B, E/tile): the same
+    fused kernel body as :func:`skim_fused`, with the batch as the outer
+    (slowest) grid dimension so each window's tiles stay VMEM-local.
+    Returns per-window per-tile packed payload (B,E,D) + per-tile counts
+    (B, E/tile); stitch per window with :func:`stitch_tiles`.
+    """
+    Bn, T, E, K = terms.shape
+    G = valid.shape[1]
+    D = payload.shape[2]
+    assert E % event_tile == 0
+    n_tiles = E // event_tile
+
+    return pl.pallas_call(
+        functools.partial(_fused_kernel_batched, program=program),
+        grid=(Bn, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, T, event_tile, K), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, G, event_tile, K), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, G, event_tile, K), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, event_tile, D), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, event_tile, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bn, E, D), payload.dtype),
+            jax.ShapeDtypeStruct((Bn, n_tiles), jnp.int32),
+        ],
+        interpret=interpret,
+    )(terms, valid, weights, payload)
+
+
 @functools.partial(jax.jit, static_argnames=("program", "interpret", "event_tile"))
 def skim_fused(terms, valid, weights, payload, *, program: Program,
                interpret: bool = True, event_tile: int = EVENT_TILE):

@@ -50,6 +50,10 @@ KNOWN_EXTRAS = frozenset(
         "pipeline_total",
         "shared_scan",
         "shard_pruned",
+        # device-resident batched cascade (DESIGN.md §16)
+        "device_batch",
+        "device_dispatches",
+        "decode_backend",
         # cluster merge metadata (coordinator-level, make_extras)
         "n_nodes",
         "concurrency",
@@ -117,6 +121,12 @@ class SkimReport:
     cascade_order: list | None = None
     cascade_stages: list | None = None
     cascade_bytes_skipped: int | None = None
+    # device-resident batched cascade (DESIGN.md §16): the configured
+    # window-batch size, the run's device dispatch count, and the
+    # store's resolved decode tier — emitted only on batched runs
+    device_batch: int | None = None
+    device_dispatches: int | None = None
+    decode_backend: str | None = None
     # path markers (emitted only when True)
     shared_scan: bool = False
     shard_pruned: bool = False
@@ -142,6 +152,9 @@ class SkimReport:
             "cascade_order": self.cascade_order,
             "cascade_stages": self.cascade_stages,
             "cascade_bytes_skipped": self.cascade_bytes_skipped,
+            "device_batch": self.device_batch,
+            "device_dispatches": self.device_dispatches,
+            "decode_backend": self.decode_backend,
             "shared_scan": self.shared_scan,
             "shard_pruned": self.shard_pruned,
         }
@@ -177,6 +190,12 @@ class SkimReport:
             extras["cascade_bytes_skipped"] = self.cascade_bytes_skipped
         if self.pipeline_total_s is not None:
             extras["pipeline_total"] = self.pipeline_total_s
+        if self.device_batch is not None:
+            extras["device_batch"] = self.device_batch
+        if self.device_dispatches is not None:
+            extras["device_dispatches"] = self.device_dispatches
+        if self.decode_backend is not None:
+            extras["decode_backend"] = self.decode_backend
         return extras
 
 

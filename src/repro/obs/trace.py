@@ -24,12 +24,15 @@ constraints, in order:
     timestamps, one ``pid`` per traced process/job).
 
 Span taxonomy (the ``kind`` field): ``query``, ``plan``, ``window``,
-``cascade_stage``, ``fetch``, ``decode``, ``kernel``, ``write``,
-``shard``, ``merge``, ``job``, ``admission``, ``queue``, ``settle``,
-``tenant``, and the fault-tolerance kinds ``retry`` (one per re-issued
-shard, attrs: failed/used node), ``hedge`` (one per hedged shard,
-attrs: outcome won/lost/cancelled), ``recover`` (one per journal-
-recovered job, attrs: resume_skip).  See DESIGN.md §13–14.
+``cascade_stage``, ``fetch``, ``decode``, ``decode_device`` (the
+backend-selected on-device basket decode, DESIGN.md §16), ``kernel``,
+``device_batch`` (one per window-batched cascade dispatch group, attrs:
+windows/pad_windows/pad_events), ``write``, ``shard``, ``merge``,
+``job``, ``admission``, ``queue``, ``settle``, ``tenant``, and the
+fault-tolerance kinds ``retry`` (one per re-issued shard, attrs:
+failed/used node), ``hedge`` (one per hedged shard, attrs: outcome
+won/lost/cancelled), ``recover`` (one per journal-recovered job, attrs:
+resume_skip).  See DESIGN.md §13–14, §16.
 """
 
 from __future__ import annotations

@@ -116,6 +116,8 @@ class SharedScanEngine:
         pipeline: bool | str = False,
         prune: bool = True,
         cascade: bool = True,
+        device_batch: int | None = None,
+        fused_backend: str | None = None,
     ):
         self.store = store
         self.input_link = input_link
@@ -137,6 +139,16 @@ class SharedScanEngine:
                 f"pipeline must be False or 'threads', got {pipeline!r}"
             )
         self.pipeline = pipeline
+        # device-resident batched cascade (DESIGN.md §16): group this
+        # many shared-scan windows per tenant cascade dispatch.  Applies
+        # only to all-cascade batches; mixed batches keep the per-window
+        # path (their ledger semantics differ per tenant anyway).
+        if device_batch is not None and int(device_batch) < 1:
+            raise ValueError(f"device_batch must be >= 1, got {device_batch}")
+        self.device_batch = int(device_batch) if device_batch else None
+        if fused_backend not in (None, "pallas", "xla", "host"):
+            raise ValueError(f"unknown fused backend {fused_backend!r}")
+        self.fused_backend = fused_backend
 
     def run_batch(
         self, queries: list[Query | dict | str], tracer=None
@@ -178,7 +190,11 @@ class SharedScanEngine:
         ]
         programs = [p.compiled_program() if self.fused else None for p in plans]
         executors = [
-            CascadeExecutor(p, store, tracer=tr) if p.cascade is not None else None
+            CascadeExecutor(
+                p, store, tracer=tr, backend=self.fused_backend
+            )
+            if p.cascade is not None
+            else None
             for p in plans
         ]
         tr.add_span("plan", kind="plan", t0=plan_t0, t1=tr.now())
@@ -256,7 +272,69 @@ class SharedScanEngine:
         src = WindowPrefetcher(
             n, chunk, load_window, enabled=(self.pipeline == "threads")
         )
-        for wi, (start, stop, (data, lb, ls)) in enumerate(src):
+
+        # device-batched shared scan (DESIGN.md §16): group loaded
+        # windows, run each tenant's cascade ONCE per group through
+        # run_window_batch, and replay the outcomes through the unchanged
+        # per-tenant ledger loop below.  Windows every tenant pruned
+        # (data is None) pass through unbatched.
+        G = (
+            self.device_batch
+            if executors and all(ex is not None for ex in executors)
+            else None
+        )
+        pending_out: dict[tuple[int, int], object] = {}
+        window_ledgers: dict[int, dict] = {}
+
+        def scan_items():
+            numbered = enumerate(src)
+            if not G or G <= 1:
+                for wi_, (start_, stop_, payload_) in numbered:
+                    yield wi_, start_, stop_, payload_
+                return
+            buf: list = []
+
+            def flush():
+                if not buf:
+                    return
+                for wi_, start_, stop_, (data_, _lb, _ls) in buf:
+                    led: dict[str, set] = {}
+                    if data_ is not None:
+                        mark_fetched(store, load_union, start_, stop_, led)
+                    window_ledgers[wi_] = led
+                for i_, ex_ in enumerate(executors):
+                    sel = [
+                        w for w in buf
+                        if w[3][0] is not None
+                        and _tenant_kind(i_, w[0]) == SCAN
+                    ]
+                    if not sel:
+                        continue
+                    entries = [
+                        (
+                            start_, stop_, data_, per_b[i_], shared_stats,
+                            window_ledgers[wi_],
+                        )
+                        for wi_, start_, stop_, (data_, _lb, _ls) in sel
+                    ]
+                    outs = ex_.run_window_batch(entries, pad_B=G)
+                    for (wi_, *_rest), out in zip(sel, outs):
+                        pending_out[(i_, wi_)] = out
+                items = list(buf)
+                buf.clear()
+                yield from items
+
+            for wi_, (start_, stop_, payload_) in numbered:
+                if payload_[0] is not None:
+                    buf.append((wi_, start_, stop_, payload_))
+                    if len(buf) == G:
+                        yield from flush()
+                else:
+                    yield from flush()
+                    yield (wi_, start_, stop_, payload_)
+            yield from flush()
+
+        for wi, start, stop, (data, lb, ls) in scan_items():
             shared_b.merge(lb)
             shared_stats.merge(ls)
             wsid = tr.begin(f"window[{wi}]", kind="window", index=wi)
@@ -264,9 +342,11 @@ class SharedScanEngine:
             # window-shared basket ledger (DESIGN.md §11): every
             # (branch, basket) pair moves at most once per window across
             # all tenants and both phases
-            ledger: dict[str, set] = {}
-            if data is not None:
-                mark_fetched(store, load_union, start, stop, ledger)
+            ledger: dict[str, set] | None = window_ledgers.pop(wi, None)
+            if ledger is None:
+                ledger = {}
+                if data is not None:
+                    mark_fetched(store, load_union, start, stop, ledger)
             tenant_parts: list[WindowPartial] = [
                 WindowPartial(
                     index=wi, start=start, stop=stop, n_passed=0,
@@ -291,9 +371,11 @@ class SharedScanEngine:
                     # demand — bytes charged to the SHARED pass (they are
                     # reusable by every tenant through the ledger), eval
                     # and decode time to this tenant
-                    outcome = ex.run_window(
-                        start, stop, data, b, shared_stats, ledger=ledger
-                    )
+                    outcome = pending_out.pop((i, wi), None)
+                    if outcome is None:
+                        outcome = ex.run_window(
+                            start, stop, data, b, shared_stats, ledger=ledger
+                        )
                     mask = outcome.mask
                     full_loaded = outcome.full_loaded
                 elif kind == ACCEPT_ALL and ex is not None and data is not None:

@@ -18,6 +18,11 @@ D005 every thread is named: ``threading.Thread`` needs ``name=``,
      ``skim-*`` convention — leaked threads must be identifiable)
 E001 no bare ``extras["..."]`` writes outside ``repro/obs/schema.py``
      (the versioned report schema owns the extras key set)
+P001 no per-iteration device dispatch outside the kernel tier: building
+     a ``jax.jit`` / ``pallas_call`` inside a ``for``/``while`` loop
+     re-traces (and may recompile) every iteration — batch the windows
+     and dispatch once (DESIGN.md §16); ``kernels/`` is exempt (it owns
+     the dispatch discipline and its caching wrappers)
 ==== =====================================================================
 
 All rules are pure ``ast`` analyses — no imports of the linted code, no
@@ -360,6 +365,52 @@ class NamedThreadRule(Rule):
                     "`ThreadPoolExecutor` without `thread_name_prefix=` — "
                     "pool workers must carry a `skim-*` name",
                 )
+
+
+# ---------------------------------------------------------------------------
+# P001 — no per-iteration device dispatch outside the kernel tier
+# ---------------------------------------------------------------------------
+
+#: dispatch constructors whose appearance inside a loop body means the
+#: program is traced/compiled per iteration instead of once per batch
+_P001_DISPATCHERS = frozenset(
+    {
+        "jax.jit",
+        "jax.pmap",
+        "jax.experimental.pallas.pallas_call",
+    }
+)
+
+
+@rule
+class PerWindowDispatchRule(Rule):
+    id = "P001"
+    title = "per-iteration device dispatch outside kernels/ (batch the windows)"
+
+    def applies_to(self, path: str) -> bool:
+        # the kernel tier owns dispatch: its wrappers cache jitted
+        # callables and are allowed to construct them wherever they like
+        return "kernels" not in Path(path).parts
+
+    def check(self, tree, source, path):
+        imports = ImportMap(tree)
+        for loop in ast.walk(tree):
+            if not isinstance(loop, (ast.For, ast.AsyncFor, ast.While)):
+                continue
+            for stmt in loop.body + loop.orelse:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = imports.resolve(node.func)
+                    if name in _P001_DISPATCHERS:
+                        yield self.finding(
+                            node, path,
+                            f"`{name}` inside a loop — each iteration "
+                            "re-traces the program (one dispatch per "
+                            "window); hoist the jitted callable out of "
+                            "the loop or batch the windows and dispatch "
+                            "once (DESIGN.md §16)",
+                        )
 
 
 # ---------------------------------------------------------------------------

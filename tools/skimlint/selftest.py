@@ -177,6 +177,53 @@ CORPUS: dict[str, dict[str, list[str]]] = {
             "def f(extras):\n    extras['k'] = 1  # skimlint: ignore[E001]\n",
         ],
     },
+    "P001": {
+        "bad": [
+            (
+                "import jax\n"
+                "def run(windows):\n"
+                "    for w in windows:\n"
+                "        out = jax.jit(step)(w)\n"
+            ),
+            (
+                "from jax.experimental import pallas as pl\n"
+                "def run(windows):\n"
+                "    i = 0\n"
+                "    while i < len(windows):\n"
+                "        out = pl.pallas_call(kernel, out_shape=shape)(windows[i])\n"
+                "        i += 1\n"
+            ),
+            (
+                "from jax import jit\n"
+                "def run(windows):\n"
+                "    for w in windows:\n"
+                "        f = jit(step)\n"
+                "        out = f(w)\n"
+            ),
+        ],
+        "good": [
+            (
+                "import jax\n"
+                "step_jit = jax.jit(step)\n"
+                "def run(windows):\n"
+                "    for w in windows:\n"
+                "        out = step_jit(w)\n"
+            ),
+            (
+                "import jax\n"
+                "def run(batch):\n"
+                "    return jax.jit(step)(batch)\n"
+            ),
+        ],
+        "suppressed": [
+            (
+                "import jax\n"
+                "def run(windows):\n"
+                "    for w in windows:\n"
+                "        out = jax.jit(step)(w)  # skimlint: ignore[P001]\n"
+            ),
+        ],
+    },
     "X001": {
         "bad": [
             "import time\nt0 = time.perf_counter()  # skimlint: ignore\n",
